@@ -1,0 +1,22 @@
+"""Benchmark helpers: timing + CSV emission."""
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup=2, iters=10):
+    """us per call of a jitted fn (blocks on the result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(rows):
+    """Print `name,us_per_call,derived` CSV rows."""
+    for name, us, derived in rows:
+        print(f"{name},{us if us is not None else ''},{derived}")
+    return rows

@@ -1,0 +1,63 @@
+"""Survey Fig. 3 / §3: centralized (PS) vs decentralized (all-reduce) vs
+gossip — HLO collective bytes per step + convergence, on an 8-worker
+mesh (spawned in a subprocess so this process keeps one device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, json
+    from jax.sharding import Mesh
+    from repro.core.topology import make_distributed_step, replicate_for
+    from repro.launch.hlo_analysis import collective_bytes
+    from repro.optim import sgd
+    mesh = Mesh(np.array(jax.devices()).reshape(8,), ("workers",))
+    D = 4096  # param dim: makes collective sizes visible
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 32, D))
+    wt = jax.random.normal(jax.random.fold_in(key, 1), (D,)) / D ** 0.5
+    y = jnp.einsum("wbd,d->wb", x, wt)
+    p0 = {"w": jnp.zeros((D,))}
+    opt = sgd(2e-4)  # lr ~ 1/D for the quadratic to contract
+    out = {}
+    for topo in ("allreduce", "ps", "gossip"):
+        params = replicate_for(mesh, "workers", p0)
+        ostate = replicate_for(mesh, "workers", opt.init(p0))
+        step = make_distributed_step(loss, opt, topo, mesh)
+        lowered = step.lower(params, ostate, {"x": x, "y": y})
+        coll = collective_bytes(lowered.compile().as_text())
+        for i in range(20):
+            params, ostate, l = step(params, ostate, {"x": x, "y": y})
+        out[topo] = {"collective_bytes": coll["total"],
+                     "counts": coll["counts"],
+                     "final_loss": float(l)}
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def run():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    if r.returncode != 0:
+        return emit([("fig3/error", None, r.stderr[-300:])])
+    res = json.loads([ln for ln in r.stdout.splitlines()
+                      if ln.startswith("RESULT ")][-1][7:])
+    rows = []
+    for topo, d in res.items():
+        rows.append((f"fig3/{topo}", None,
+                     f"collective_bytes_per_step={d['collective_bytes']};"
+                     f"final_loss={d['final_loss']:.5f}"))
+    return emit(rows)

@@ -1,0 +1,30 @@
+"""Survey Fig. 5: zero-copy on-device batch simulation vs the CPU↔device
+copy pipeline (io_callback round-trip per step)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn, emit
+from repro.core.networks import MLPPolicy
+from repro.core.rollout import rollout
+from repro.envs import CartPole
+from repro.envs.host_env import HostPipelined
+
+
+def run():
+    n, T = 64, 32
+    pol = MLPPolicy(4, 2, hidden=(32,))
+    params = pol.init(jax.random.PRNGKey(0))
+    rows = []
+    results = {}
+    for name, env in (("zero_copy", CartPole()),
+                      ("host_pipeline", HostPipelined(CartPole()))):
+        state = CartPole().reset_batch(jax.random.PRNGKey(1), n)
+        fn = jax.jit(lambda p, k, s: rollout(pol, p, env, k, s, T))
+        us = time_fn(fn, params, jax.random.PRNGKey(2), state,
+                     warmup=1, iters=3)
+        results[name] = us
+        fps = n * T / (us / 1e6)
+        rows.append((f"fig5/{name}", round(us, 1), f"fps={fps:.0f}"))
+    speedup = results["host_pipeline"] / results["zero_copy"]
+    rows.append(("fig5/zero_copy_speedup", None, f"x{speedup:.1f}"))
+    return emit(rows)

@@ -1,0 +1,95 @@
+"""Roofline table: read experiments/dryrun/*.json and render the
+per-(arch × shape × mesh) three-term analysis (§Roofline deliverable)."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+ICI_BW = 50e9
+
+
+def load_records(tag=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag is not None and r.get("tag", "") != tag:
+            continue
+        if r.get("status") == "ok":
+            _add_wire_terms(r)
+        recs.append(r)
+    return recs
+
+
+def _add_wire_terms(r):
+    """Bytes-on-wire collective term (ring factors per op kind), from
+    the stored per-kind breakdowns: corrected = top + (R-1) x probe."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "src"))
+    from repro.launch.hlo_analysis import wire_bytes
+    top = r.get("collective_bytes", {})
+    probe = r.get("collective_probe_bytes", {})
+    reps = max(r.get("stack_repeats", 0) - 1, 0)
+    kinds = {k: top.get(k, 0) + reps * probe.get(k, 0)
+             for k in ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute")}
+    r["collective_wire_bytes"] = wire_bytes(kinds)
+    r["collective_wire_term_s"] = r["collective_wire_bytes"] / ICI_BW
+
+
+def render_markdown(recs, hw_note=True):
+    lines = []
+    if hw_note:
+        lines.append("Hardware: TPU v5e — 197 TF/s bf16, 819 GB/s HBM, "
+                     "50 GB/s/link ICI. Terms in seconds per step, "
+                     "per chip.")
+    lines.append("| arch | shape | mesh | compute_s | memory_s | "
+                 "collective_s | bottleneck | useful_flops | note |")
+    lines.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"— | — | — | — | — | {r['reason']} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERR | | | | | {r.get('error', '')[:60]} |")
+            continue
+        uf = r.get("useful_flops_ratio")
+        wire = r.get("collective_wire_term_s", r["collective_term_s"])
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_term_s']:.3e} | {r['memory_term_s']:.3e} | "
+            f"{wire:.3e} | {r['bottleneck']} | "
+            f"{uf:.2f} | compile={r.get('compile_s')}s |")
+    return "\n".join(lines)
+
+
+def run():
+    recs = [r for r in load_records() if r.get("tag", "") == ""]
+    rows = []
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_err = len(recs) - n_ok - n_skip
+    rows.append(("roofline/records", None,
+                 f"ok={n_ok};skipped={n_skip};error={n_err}"))
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                     None,
+                     f"compute={r['compute_term_s']:.3e};"
+                     f"memory={r['memory_term_s']:.3e};"
+                     f"collective={r['collective_term_s']:.3e};"
+                     f"bottleneck={r['bottleneck']}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    print(render_markdown(load_records()))

@@ -1,0 +1,29 @@
+"""Benchmark harness entry: one module per survey table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (table1_computing, fig3_topologies,
+                            fig5_simulation, fig6_sync, sec7_evolution,
+                            table2_features, roofline)
+    mods = [("table1_computing", table1_computing),
+            ("fig3_topologies", fig3_topologies),
+            ("fig5_simulation", fig5_simulation),
+            ("fig6_sync", fig6_sync),
+            ("sec7_evolution", sec7_evolution),
+            ("table2_features", table2_features),
+            ("roofline", roofline)]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in mods:
+        if only and only != name:
+            continue
+        try:
+            mod.run()
+        except Exception as e:  # keep the harness running
+            print(f"{name}/ERROR,,{type(e).__name__}: {e}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,44 @@
+"""Survey §7: evolution-based vs backprop-based training — per-step
+inter-worker communication bytes (the survey's central scaling argument
+for ES/GA) and generation throughput."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn, emit
+from repro.core.evo import ES, DeepGA
+from repro.core.networks import MLPPolicy
+from repro.envs import CartPole, Pendulum
+
+
+def run():
+    rows = []
+    env = Pendulum()
+    pol = MLPPolicy(env.obs_dim, 0, env.act_dim, hidden=(32, 32))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        pol.init(jax.random.PRNGKey(0))))
+
+    es = ES(pol, env, pop_size=32, max_steps=100)
+    theta = es.init(jax.random.PRNGKey(0))
+    step = jax.jit(es.step)
+    us = time_fn(step, theta, jax.random.PRNGKey(1), warmup=1, iters=3)
+    _, _, es_comm = step(theta, jax.random.PRNGKey(1))
+    rows.append(("sec7/es_generation", round(us, 1),
+                 f"comm_bytes={es_comm};pop=32"))
+
+    cenv = CartPole()
+    cpol = MLPPolicy(cenv.obs_dim, cenv.n_actions, hidden=(32, 32))
+    ga = DeepGA(cpol, cenv, pop_size=32, max_steps=100)
+    gstate = ga.init(jax.random.PRNGKey(0))
+    gstep = jax.jit(ga.step)
+    us = time_fn(gstep, gstate, jax.random.PRNGKey(1), warmup=1, iters=3)
+    _, _, ga_comm = gstep(gstate, jax.random.PRNGKey(1))
+    rows.append(("sec7/ga_generation", round(us, 1),
+                 f"comm_bytes={ga_comm};pop=32;seed_chain_encoding"))
+
+    # DSGD reference: one gradient exchange = 4 bytes * n_params / worker
+    dsgd_comm = 4 * n_params
+    rows.append(("sec7/dsgd_reference", None,
+                 f"comm_bytes={dsgd_comm};n_params={n_params}"))
+    rows.append(("sec7/es_comm_reduction", None,
+                 f"x{dsgd_comm / int(es_comm):.0f}"))
+    return emit(rows)

@@ -1,0 +1,26 @@
+"""Survey Table 1 (computing parallelism): environment-steps/second as
+batch-simulation width scales — the single-machine-parallelism column of
+the survey, realized as vmap width on one device."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn, emit
+from repro.core.networks import MLPPolicy
+from repro.core.rollout import rollout
+from repro.envs import CartPole
+
+
+def run():
+    env = CartPole()
+    pol = MLPPolicy(env.obs_dim, env.n_actions, hidden=(32,))
+    params = pol.init(jax.random.PRNGKey(0))
+    T = 64
+    rows = []
+    for n in (1, 8, 64, 256, 1024):
+        state = env.reset_batch(jax.random.PRNGKey(1), n)
+        fn = jax.jit(lambda p, k, s: rollout(pol, p, env, k, s, T))
+        us = time_fn(fn, params, jax.random.PRNGKey(2), state, iters=5)
+        fps = n * T / (us / 1e6)
+        rows.append((f"table1/batch_sim_width_{n}", round(us, 1),
+                     f"fps={fps:.0f}"))
+    return emit(rows)

@@ -1,0 +1,26 @@
+"""Batched serving example (the survey's Actor/inference path): prefill a
+prompt batch, then decode with per-layer KV/recurrent caches — including
+the sub-quadratic paths (rwkv6 state, gemma3 sliding-window ring cache).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b
+"""
+import argparse
+import json
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen-len", type=int, default=24)
+    args = ap.parse_args()
+    out = serve(args.arch, reduced=True, batch=args.batch,
+                prompt_len=args.prompt_len, gen_len=args.gen_len)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Checkpointing: flatten the (params, opt_state, step) pytree to a
+key-path -> array npz archive. Sharding-aware on restore: arrays are
+device_put against the target sharding (on a real mesh each host only
+materializes its addressable shards)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save_checkpoint(path, tree, step=None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+    return path
+
+
+def load_checkpoint(path, example_tree, shardings=None):
+    """Restore into the structure of `example_tree`. `shardings` (same
+    structure, optional) device_puts each leaf against its sharding."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as z:
+        data = {k: z[k] for k in z.files}
+    step = data.pop("__step__", None)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(example_tree)
+    out = []
+    for path_keys, leaf in leaves_p:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_keys)
+        arr = data[key].astype(leaf.dtype) if hasattr(leaf, "dtype") \
+            else data[key]
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, (int(step) if step is not None else None)

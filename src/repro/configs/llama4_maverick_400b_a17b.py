@@ -1,0 +1,18 @@
+"""Llama-4 Maverick 400B-A17B [hf:meta-llama/Llama-4-Scout-17B-16E family].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048; MoE 128 experts
+top-1 with one shared expert, MoE FFN on alternating layers (dense FFN on
+the others) — matching Maverick's interleaved dense/MoE design. "Early
+fusion" multimodality is out of scope of the language backbone (text
+configs only, per the assigned-architecture carve-out).
+"""
+from repro.configs.base import ModelConfig, MoESpec, ATTN, register
+
+CONFIG = register(ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=8192,
+    vocab=202048, head_dim=128, layer_pattern=(ATTN,), norm="rmsnorm",
+    rope_theta=500000.0,
+    moe=MoESpec(n_experts=128, top_k=1, d_ff=8192, n_shared=1, every=2),
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+))

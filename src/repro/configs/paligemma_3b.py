@@ -1,0 +1,18 @@
+"""PaliGemma-3B [arXiv:2407.07726] — SigLIP + Gemma; vision frontend STUB.
+
+18L d_model=2048 8H (GQA kv=1) d_ff=16384 vocab=257216, head_dim=256.
+The SigLIP vision tower + projector is a stub: input_specs() provides 256
+precomputed patch embeddings (B, 256, 2048) prepended to the text tokens.
+Pure full attention -> long_500k skipped.
+"""
+from repro.configs.base import ModelConfig, ATTN, register
+
+CONFIG = register(ModelConfig(
+    name="paligemma-3b", family="vlm",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, d_ff=16384,
+    vocab=257216, head_dim=256, layer_pattern=(ATTN,), norm="rmsnorm",
+    tie_embeddings=True, frontend="vision_stub", frontend_tokens=256,
+    frontend_dim=1152,  # SigLIP width; learned projector maps to d_model
+    rope_theta=10000.0,
+    source="arXiv:2407.07726",
+))

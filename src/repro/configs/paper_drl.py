@@ -1,0 +1,14 @@
+"""The survey's own workload: a small policy trunk for the DRL engine.
+
+Used by examples/impala_pendulum.py etc. as the policy/value backbone when
+a transformer trunk (rather than an MLP) is requested — ties the assigned
+model zoo to the paper's distributed-DRL machinery.
+"""
+from repro.configs.base import ModelConfig, ATTN, register
+
+CONFIG = register(ModelConfig(
+    name="paper-drl-trunk", family="dense",
+    n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+    vocab=1024, layer_pattern=(ATTN,), norm="rmsnorm",
+    source="survey §3 actor/learner policy backbone",
+))

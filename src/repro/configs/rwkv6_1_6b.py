@@ -1,0 +1,13 @@
+"""RWKV-6 "Finch" 1.6B [arXiv:2404.05892] — attention-free, data-dependent decay.
+
+24L d_model=2048 d_ff=7168 vocab=65536. 32 heads of size 64 for the WKV
+state. O(1)-state decode: long_500k runs.
+"""
+from repro.configs.base import ModelConfig, RWKV, register
+
+CONFIG = register(ModelConfig(
+    name="rwkv6-1.6b", family="ssm",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=7168,
+    vocab=65536, head_dim=64, layer_pattern=(RWKV,), norm="layernorm",
+    source="arXiv:2404.05892",
+))

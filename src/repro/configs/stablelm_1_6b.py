@@ -1,0 +1,15 @@
+"""StableLM-2-1.6B [hf:stabilityai/stablelm-2-1_6b].
+
+24L d_model=2048 32H (GQA kv=32, i.e. MHA) d_ff=5632 vocab=100352.
+Dense decoder, LayerNorm, rotary on 25% of head dim (we apply full rope —
+noted simplification), untied embeddings.
+"""
+from repro.configs.base import ModelConfig, ATTN, register
+
+CONFIG = register(ModelConfig(
+    name="stablelm-1.6b", family="dense",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=5632,
+    vocab=100352, layer_pattern=(ATTN,), norm="layernorm",
+    rope_theta=10000.0,
+    source="hf:stabilityai/stablelm-2-1_6b",
+))

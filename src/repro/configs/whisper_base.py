@@ -1,0 +1,18 @@
+"""Whisper-base [arXiv:2212.04356] — encoder-decoder, conv frontend STUB.
+
+6L encoder + 6L decoder, d_model=512 8H (kv=8) d_ff=2048 vocab=51865.
+The mel-spectrogram + conv feature extractor is a stub: input_specs()
+provides 1500 precomputed frame embeddings of shape (B, 1500, 512); we
+implement the transformer encoder over them and the text decoder with
+self- + cross-attention. Decode shapes exercise the decoder with KV
+cache; long_500k skipped (full attention).
+"""
+from repro.configs.base import ModelConfig, ATTN, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+    vocab=51865, layer_pattern=(ATTN,), norm="layernorm",
+    enc_layers=6, enc_tokens=1500, frontend="audio_stub",
+    source="arXiv:2212.04356",
+))

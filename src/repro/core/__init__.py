@@ -1,0 +1,11 @@
+"""repro.core — the survey's taxonomy as a composable framework.
+
+Axes (each independently selectable):
+  topology:  ps | allreduce | gossip        (survey §3)
+  sync:      bsp | asp | ssp                (survey §6)
+  algo:      dqn | ppo | impala | a3c       (backprop training)
+  evo:       es | ga | erl                  (survey §7, evolution training)
+"""
+from repro.core.networks import MLPPolicy  # noqa: F401
+from repro.core.rollout import rollout  # noqa: F401
+from repro.core.vtrace import vtrace  # noqa: F401

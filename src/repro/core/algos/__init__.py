@@ -1,0 +1,4 @@
+from repro.core.algos.dqn import DQN  # noqa: F401
+from repro.core.algos.ppo import PPO  # noqa: F401
+from repro.core.algos.impala import IMPALA  # noqa: F401
+from repro.core.algos.a3c import A3C  # noqa: F401

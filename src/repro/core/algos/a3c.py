@@ -1,0 +1,64 @@
+"""A3C (survey §3.1/Fig. 4c): asynchronous advantage actor-critic.
+
+SPMD adaptation: the async actor-learner threads are modeled with the
+deterministic staleness engine (core.sync) — each simulated thread
+accumulates n-step actor-critic gradients against a stale copy of the
+global network and applies them Hogwild-style (sequentially, which is
+the reproducible rendering of lock-free updates)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class A3C:
+    policy: object
+    gamma: float = 0.99
+    vf_coef: float = 0.5
+    ent_coef: float = 0.01
+
+    def loss(self, params, traj, bootstrap_obs):
+        """n-step returns from a time-major on-policy trajectory."""
+        T, B = traj["reward"].shape
+        obs_flat = traj["obs"].reshape((-1,) + traj["obs"].shape[2:])
+        act_flat = traj["action"].reshape((-1,)
+                                          + traj["action"].shape[2:])
+        logp, v, ent = self.policy.log_prob(params, obs_flat, act_flat)
+        logp, v, ent = (a.reshape(T, B) for a in (logp, v, ent))
+        _, boot = self.policy.apply(params, bootstrap_obs)
+        discounts = self.gamma * (1.0 - traj["done"].astype(jnp.float32))
+
+        def disc_ret(acc, xs):
+            r, d = xs
+            acc = r + d * acc
+            return acc, acc
+
+        _, ret = jax.lax.scan(disc_ret, boot,
+                              (traj["reward"], discounts), reverse=True)
+        adv = jax.lax.stop_gradient(ret - v)
+        return (-jnp.mean(logp * adv)
+                + self.vf_coef * jnp.mean(jnp.square(v - ret))
+                - self.ent_coef * jnp.mean(ent))
+
+    @functools.partial(jax.jit, static_argnames=("self", "optimizer",
+                                                 "n_threads"))
+    def hogwild_update(self, params, opt_state, trajs, boot_obs,
+                       delays_params, optimizer, n_threads):
+        """Apply n_threads gradient contributions sequentially; thread i
+        computed its gradient against `delays_params[i]` (stale copies).
+        trajs: pytree with leading thread dim."""
+        def body(carry, xs):
+            params, opt_state = carry
+            traj_i, boot_i, stale_i = xs
+            _, grads = jax.value_and_grad(self.loss)(stale_i, traj_i,
+                                                     boot_i)
+            params, opt_state = optimizer.apply(params, opt_state, grads)
+            return (params, opt_state), None
+
+        (params, opt_state), _ = jax.lax.scan(
+            body, (params, opt_state), (trajs, boot_obs, delays_params))
+        return params, opt_state

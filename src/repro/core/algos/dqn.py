@@ -1,0 +1,106 @@
+"""DQN with (prioritized) replay and target network — the Gorila/Ape-X
+learner (survey §3.1). Actor and learner are separate jitted functions
+so the driver can place them on different workers."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.replay import UniformReplay, PrioritizedReplay
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DQN:
+    obs_dim: int
+    n_actions: int
+    hidden: tuple = (64, 64)
+    gamma: float = 0.99
+    target_update: int = 100
+    double: bool = True
+    prioritized: bool = True
+    replay_capacity: int = 10000
+
+    @property
+    def replay(self):
+        return (PrioritizedReplay(self.replay_capacity)
+                if self.prioritized
+                else UniformReplay(self.replay_capacity))
+
+    # -- q network -----------------------------------------------------
+    def init(self, key):
+        sizes = (self.obs_dim,) + self.hidden + (self.n_actions,)
+        ks = jax.random.split(key, len(sizes))
+        net = [{"w": dense_init(ks[i], (sizes[i], sizes[i + 1])),
+                "b": jnp.zeros((sizes[i + 1],))}
+               for i in range(len(sizes) - 1)]
+        return {"online": net,
+                "target": jax.tree_util.tree_map(jnp.copy, net),
+                "steps": jnp.zeros((), jnp.int32)}
+
+    @staticmethod
+    def q_values(net, obs):
+        h = obs
+        for lay in net[:-1]:
+            h = jax.nn.relu(h @ lay["w"] + lay["b"])
+        return h @ net[-1]["w"] + net[-1]["b"]
+
+    # -- actor ----------------------------------------------------------
+    def act(self, params, obs, key, epsilon):
+        q = self.q_values(params["online"], obs)
+        greedy = jnp.argmax(q, axis=-1)
+        rand = jax.random.randint(key, greedy.shape, 0, self.n_actions)
+        take_rand = jax.random.uniform(key, greedy.shape) < epsilon
+        return jnp.where(take_rand, rand, greedy)
+
+    # -- learner ---------------------------------------------------------
+    def td_errors(self, params, batch):
+        q = self.q_values(params["online"], batch["obs"])
+        qa = jnp.take_along_axis(q, batch["action"][..., None].astype(
+            jnp.int32), -1)[..., 0]
+        qn_t = self.q_values(params["target"], batch["next_obs"])
+        if self.double:
+            qn_o = self.q_values(params["online"], batch["next_obs"])
+            a_star = jnp.argmax(qn_o, axis=-1)
+            q_next = jnp.take_along_axis(qn_t, a_star[..., None],
+                                         -1)[..., 0]
+        else:
+            q_next = qn_t.max(axis=-1)
+        target = batch["reward"] + self.gamma * (
+            1.0 - batch["done"].astype(jnp.float32)) * q_next
+        return jax.lax.stop_gradient(target) - qa
+
+    def loss(self, params, batch, is_weights=None):
+        td = self.td_errors(params, batch)
+        w = jnp.ones_like(td) if is_weights is None else is_weights
+        return jnp.mean(w * jnp.square(td)), td
+
+    @functools.partial(jax.jit, static_argnames=("self", "optimizer"))
+    def learner_step(self, params, opt_state, replay_state, key,
+                     optimizer, batch_size=64):
+        if self.prioritized:
+            batch, idx, w = self.replay.sample(replay_state, key,
+                                               batch_size)
+        else:
+            batch, idx = self.replay.sample(replay_state, key, batch_size)
+            w = None
+        def loss_online(online):
+            return self.loss(dict(params, online=online), batch, w)
+
+        (loss, td), grads = jax.value_and_grad(
+            loss_online, has_aux=True)(params["online"])
+        online, opt_state = optimizer.apply(params["online"], opt_state,
+                                            grads)
+        params = dict(params, online=online)
+        if self.prioritized:
+            replay_state = self.replay.update_priorities(replay_state,
+                                                         idx, td)
+        steps = params["steps"] + 1
+        target = jax.tree_util.tree_map(
+            lambda t, o: jnp.where(steps % self.target_update == 0, o, t),
+            params["target"], params["online"])
+        params = dict(params, steps=steps, target=target)
+        return params, opt_state, replay_state, loss

@@ -1,0 +1,87 @@
+"""PPO with GAE; DD-PPO mode = decentralized synchronous gradient
+exchange over a worker axis (survey §3.2 / §6.2)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def gae(rewards, values, dones, bootstrap, gamma=0.99, lam=0.95):
+    """Time-major (T,B). Returns (advantages, returns)."""
+    values_tp1 = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
+    nonterm = 1.0 - dones.astype(jnp.float32)
+    deltas = rewards + gamma * nonterm * values_tp1 - values
+
+    def body(acc, xs):
+        delta, nt = xs
+        acc = delta + gamma * lam * nt * acc
+        return acc, acc
+
+    _, adv = jax.lax.scan(body, jnp.zeros_like(bootstrap),
+                          (deltas, nonterm), reverse=True)
+    return adv, adv + values
+
+
+@dataclasses.dataclass(frozen=True)
+class PPO:
+    policy: object
+    clip_eps: float = 0.2
+    vf_coef: float = 0.5
+    ent_coef: float = 0.01
+    gamma: float = 0.99
+    lam: float = 0.95
+
+    def loss(self, params, batch):
+        """batch: flattened {obs, action, logp, adv, ret}."""
+        logp, v, ent = self.policy.log_prob(params, batch["obs"],
+                                            batch["action"])
+        ratio = jnp.exp(logp - batch["logp"])
+        adv = batch["adv"]
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        unclipped = ratio * adv
+        clipped = jnp.clip(ratio, 1 - self.clip_eps,
+                           1 + self.clip_eps) * adv
+        pg = -jnp.mean(jnp.minimum(unclipped, clipped))
+        vf = jnp.mean(jnp.square(v - batch["ret"]))
+        return pg + self.vf_coef * vf - self.ent_coef * jnp.mean(ent)
+
+    def make_batch(self, params, traj, last_obs):
+        """traj: time-major rollout dict. Computes GAE and flattens."""
+        _, boot = self.policy.apply(params, last_obs)
+        adv, ret = gae(traj["reward"], traj["value"], traj["done"], boot,
+                       self.gamma, self.lam)
+        flat = lambda a: a.reshape((-1,) + a.shape[2:])
+        return {"obs": flat(traj["obs"]), "action": flat(traj["action"]),
+                "logp": flat(traj["logp"]), "adv": flat(adv),
+                "ret": flat(ret)}
+
+    @functools.partial(jax.jit, static_argnames=("self", "optimizer",
+                                                 "n_epochs", "n_minibatch"))
+    def update(self, params, opt_state, batch, key, optimizer,
+               n_epochs=4, n_minibatch=4):
+        n = batch["obs"].shape[0]
+        mb = n // n_minibatch
+
+        def epoch(carry, key_e):
+            params, opt_state = carry
+            perm = jax.random.permutation(key_e, n)
+
+            def minibatch(carry, i):
+                params, opt_state = carry
+                idx = jax.lax.dynamic_slice_in_dim(perm, i * mb, mb)
+                mbatch = jax.tree_util.tree_map(lambda a: a[idx], batch)
+                loss, grads = jax.value_and_grad(self.loss)(params, mbatch)
+                params, opt_state = optimizer.apply(params, opt_state,
+                                                    grads)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                minibatch, (params, opt_state), jnp.arange(n_minibatch))
+            return (params, opt_state), losses.mean()
+
+        (params, opt_state), losses = jax.lax.scan(
+            epoch, (params, opt_state), jax.random.split(key, n_epochs))
+        return params, opt_state, losses.mean()

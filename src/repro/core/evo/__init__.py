@@ -1,0 +1,3 @@
+from repro.core.evo.es import ES  # noqa: F401
+from repro.core.evo.ga import DeepGA  # noqa: F401
+from repro.core.evo.erl import ERL  # noqa: F401

@@ -1,0 +1,122 @@
+"""Hybrid Evolution-guided RL (Khadka & Tumer 2018; survey §7.3).
+
+A GA population of policies explores and fills a shared replay buffer;
+a gradient learner (actor-critic on the replay data) trains in parallel
+and is periodically *injected* into the population, replacing the worst
+member — combining evolutionary exploration with backprop sample reuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+from repro.core.replay import UniformReplay
+from repro.core.rollout import episode_return
+
+
+@dataclasses.dataclass(frozen=True)
+class ERL:
+    policy: object                 # continuous MLPPolicy
+    env: object
+    pop_size: int = 8
+    elite: int = 2
+    sigma: float = 0.05
+    gamma: float = 0.99
+    inject_every: int = 2
+    max_steps: int = 200
+    replay_capacity: int = 20000
+
+    def init(self, key):
+        ks = jax.random.split(key, self.pop_size + 1)
+        thetas = []
+        for i in range(self.pop_size):
+            p = self.policy.init(ks[i])
+            flat, unravel = jax.flatten_util.ravel_pytree(p)
+            thetas.append(flat)
+        object.__setattr__(self, "_unravel", unravel)
+        learner = self.policy.init(ks[-1])
+        lflat, _ = jax.flatten_util.ravel_pytree(learner)
+        replay = UniformReplay(self.replay_capacity)
+        example = {"obs": jnp.zeros((self.env.obs_dim,)),
+                   "action": jnp.zeros((self.env.act_dim,)),
+                   "reward": jnp.zeros(()),
+                   "next_obs": jnp.zeros((self.env.obs_dim,)),
+                   "done": jnp.zeros((), bool)}
+        return {"pop": jnp.stack(thetas), "learner": lflat,
+                "replay": replay.init(example), "gen": 0}, replay
+
+    # ---- population rollouts also fill the replay buffer --------------
+    def evaluate_and_collect(self, state, replay, key):
+        def run_member(theta, k):
+            params = self._unravel(theta)
+            # stochastic rollout for diversity + transition collection
+            def step(carry, kk):
+                s, done = carry
+                obs = self.env.obs(s)
+                a, _ = self.policy.sample(params, obs, kk)
+                ns, nobs, r, nd = self.env.step(s, a)
+                trans = {"obs": obs, "action": a.reshape(-1), "reward": r,
+                         "next_obs": nobs, "done": nd}
+                ns = jax.tree_util.tree_map(
+                    lambda x, y: jnp.where(done, x, y), s, ns)
+                return (ns, done | nd), (trans, jnp.where(done, 0.0, r))
+            s0 = self.env.reset(k)
+            (_, _), (trans, rews) = jax.lax.scan(
+                step, (s0, jnp.zeros((), bool)),
+                jax.random.split(k, self.max_steps))
+            return trans, rews.sum()
+
+        keys = jax.random.split(key, self.pop_size)
+        trans, fits = jax.vmap(run_member)(state["pop"], keys)
+        flat_trans = jax.tree_util.tree_map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), trans)
+        rstate = replay.add_batch(state["replay"], flat_trans)
+        return dict(state, replay=rstate), fits
+
+    # ---- gradient learner (advantage-free actor-critic on replay) -----
+    def learner_loss(self, params, batch):
+        pi, v = self.policy.apply(params, batch["obs"])
+        v_next = self.policy.apply(params, batch["next_obs"])[1]
+        target = batch["reward"] + self.gamma * (
+            1 - batch["done"].astype(jnp.float32)) * \
+            jax.lax.stop_gradient(v_next)
+        td = target - v
+        logp, _, _ = self.policy.log_prob(params, batch["obs"],
+                                          batch["action"][..., 0]
+                                          if self.policy.discrete
+                                          else batch["action"])
+        return (jnp.mean(jnp.square(td))
+                - jnp.mean(logp * jax.lax.stop_gradient(td)))
+
+    def step(self, state, replay, key, optimizer, opt_state,
+             learner_updates=8, batch_size=128):
+        """One ERL generation."""
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        state, fits = self.evaluate_and_collect(state, replay, k1)
+        # GA: truncation selection + gaussian mutation
+        _, top = jax.lax.top_k(fits, self.elite)
+        parents = jax.random.choice(k2, top, (self.pop_size,))
+        noise = self.sigma * jax.random.normal(k3, state["pop"].shape)
+        pop = state["pop"][parents] + noise
+        pop = pop.at[0].set(state["pop"][top[0]])      # elitism
+        # gradient learner on replay
+        lparams = self._unravel(state["learner"])
+        for i in range(learner_updates):
+            batch, _ = replay.sample(state["replay"],
+                                     jax.random.fold_in(k4, i),
+                                     batch_size)
+            _, grads = jax.value_and_grad(self.learner_loss)(lparams,
+                                                             batch)
+            lparams, opt_state = optimizer.apply(lparams, opt_state,
+                                                 grads)
+        lflat, _ = jax.flatten_util.ravel_pytree(lparams)
+        # periodic injection: learner replaces the worst member
+        gen = state["gen"] + 1
+        if gen % self.inject_every == 0:
+            worst = jnp.argmin(fits)
+            pop = pop.at[worst].set(lflat)
+        state = dict(state, pop=pop, learner=lflat, gen=gen)
+        return state, opt_state, fits

@@ -1,0 +1,69 @@
+"""Evolution Strategies (Salimans et al. 2017; survey §7.1).
+
+Antithetic sampling, rank-shaped fitness, seed-based perturbation
+reconstruction. The survey's key scaling observation — communication per
+worker is ONE scalar fitness per member, not a gradient vector — is
+measured in benchmarks/sec7_evolution.py (`comm_bytes_per_step`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+from repro.core.rollout import episode_return
+
+
+def _ravel(params):
+    flat, unravel = jax.flatten_util.ravel_pytree(params)
+    return flat, unravel
+
+
+def centered_ranks(x):
+    """Fitness shaping: map fitnesses to ranks in [-0.5, 0.5]."""
+    ranks = jnp.argsort(jnp.argsort(x))
+    return ranks.astype(jnp.float32) / (x.shape[0] - 1) - 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class ES:
+    policy: object
+    env: object
+    pop_size: int = 32            # antithetic pairs: pop_size must be even
+    sigma: float = 0.1
+    lr: float = 0.05
+    max_steps: int = 200
+
+    def init(self, key):
+        params = self.policy.init(key)
+        theta, unravel = _ravel(params)
+        object.__setattr__(self, "_unravel", unravel)
+        return theta
+
+    def unravel(self, theta):
+        return self._unravel(theta)
+
+    def fitness(self, theta, key):
+        return episode_return(self.policy, self._unravel(theta), self.env,
+                              key, self.max_steps)
+
+    def step(self, theta, key):
+        """One generation. Returns (theta, mean_fitness, comm_bytes)."""
+        k_eps, k_ev = jax.random.split(key)
+        half = self.pop_size // 2
+        eps = jax.random.normal(k_eps, (half, theta.shape[0]))
+        eps = jnp.concatenate([eps, -eps], axis=0)      # antithetic
+        pop = theta[None] + self.sigma * eps
+        # common random numbers: every member evaluated on the SAME
+        # episode seed — removes env-reset noise from the fitness
+        # comparison (standard ES variance reduction)
+        keys = jnp.broadcast_to(k_ev, (self.pop_size,) + k_ev.shape)
+        fits = jax.vmap(self.fitness)(pop, keys)
+        shaped = centered_ranks(fits)
+        grad = (shaped[:, None] * eps).mean(0) / self.sigma
+        theta = theta + self.lr * grad
+        # survey §7.1: inter-worker traffic = one f32 fitness per member
+        comm_bytes = 4 * self.pop_size
+        return theta, fits.mean(), comm_bytes

@@ -1,0 +1,77 @@
+"""Deep GA (Such et al. 2017; survey §7.2): gradient-free truncation
+selection with the *compact seed-chain encoding* — an individual is the
+list of mutation seeds that reconstructs it, so workers exchange a few
+int32 seeds instead of parameter vectors."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+from repro.core.rollout import episode_return
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepGA:
+    policy: object
+    env: object
+    pop_size: int = 32
+    truncation: int = 8
+    sigma: float = 0.05
+    max_steps: int = 200
+    chain_len: int = 16           # max generations encoded per individual
+
+    def init(self, key):
+        params = self.policy.init(key)
+        theta0, unravel = jax.flatten_util.ravel_pytree(params)
+        object.__setattr__(self, "_unravel", unravel)
+        object.__setattr__(self, "_theta0", theta0)
+        # population = seed chains (pop, chain_len); 0 = empty slot
+        chains = jnp.zeros((self.pop_size, self.chain_len), jnp.uint32)
+        lens = jnp.zeros((self.pop_size,), jnp.int32)
+        return {"chains": chains, "lens": lens}
+
+    # -- compact encoding reconstruction --------------------------------
+    def reconstruct(self, chain, length):
+        """θ = θ0 + σ Σ_i ε(seed_i) — rebuild params from the seed list."""
+        def body(theta, i):
+            seed = chain[i]
+            eps = jax.random.normal(jax.random.PRNGKey(seed),
+                                    theta.shape)
+            theta = theta + jnp.where(i < length, self.sigma, 0.0) * eps
+            return theta, None
+        theta, _ = jax.lax.scan(body, self._theta0,
+                                jnp.arange(self.chain_len))
+        return theta
+
+    def fitness(self, chain, length, key):
+        theta = self.reconstruct(chain, length)
+        return episode_return(self.policy, self._unravel(theta), self.env,
+                              key, self.max_steps)
+
+    def step(self, state, key):
+        """One generation. Returns (state, best_fitness, comm_bytes)."""
+        k_ev, k_sel, k_mut = jax.random.split(key, 3)
+        keys = jax.random.split(k_ev, self.pop_size)
+        fits = jax.vmap(self.fitness)(state["chains"], state["lens"], keys)
+        _, top = jax.lax.top_k(fits, self.truncation)
+        # children: pick a random parent among the elite, append a seed
+        parents = jax.random.choice(k_sel, top, (self.pop_size,))
+        new_seeds = jax.random.randint(
+            k_mut, (self.pop_size,), 1, jnp.iinfo(jnp.int32).max
+        ).astype(jnp.uint32)
+        pc = state["chains"][parents]
+        pl = state["lens"][parents]
+        pos = jnp.minimum(pl, self.chain_len - 1)
+        chains = jax.vmap(lambda c, i, s: c.at[i].set(s))(pc, pos,
+                                                          new_seeds)
+        lens = jnp.minimum(pl + 1, self.chain_len)
+        # elitism: slot 0 keeps the best individual unmutated
+        best = top[0]
+        chains = chains.at[0].set(state["chains"][best])
+        lens = lens.at[0].set(state["lens"][best])
+        # survey §7.2: traffic = one uint32 seed + one f32 fitness each
+        comm_bytes = 8 * self.pop_size
+        return {"chains": chains, "lens": lens}, fits.max(), comm_bytes

@@ -1,0 +1,128 @@
+"""Policy/value networks: MLP actor-critic + transformer-trunk adapter."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class MLPPolicy:
+    """Actor-critic MLP. Discrete: categorical logits; continuous:
+    tanh-gaussian (state-independent log-std)."""
+
+    def __init__(self, obs_dim, n_actions=0, act_dim=1, hidden=(64, 64)):
+        self.obs_dim = obs_dim
+        self.n_actions = n_actions
+        self.act_dim = act_dim
+        self.hidden = hidden
+        self.discrete = n_actions > 0
+
+    def init(self, key):
+        sizes = (self.obs_dim,) + self.hidden
+        ks = jax.random.split(key, len(sizes) + 2)
+        p = {"layers": [
+            {"w": dense_init(ks[i], (sizes[i], sizes[i + 1])),
+             "b": jnp.zeros((sizes[i + 1],))}
+            for i in range(len(sizes) - 1)]}
+        out = self.n_actions if self.discrete else self.act_dim
+        p["pi"] = {"w": dense_init(ks[-2], (sizes[-1], out), scale=0.01),
+                   "b": jnp.zeros((out,))}
+        p["v"] = {"w": dense_init(ks[-1], (sizes[-1], 1), scale=1.0),
+                  "b": jnp.zeros((1,))}
+        if not self.discrete:
+            p["log_std"] = jnp.full((self.act_dim,), -0.5)
+        return p
+
+    def trunk(self, params, obs):
+        h = obs
+        for lay in params["layers"]:
+            h = jnp.tanh(h @ lay["w"] + lay["b"])
+        return h
+
+    def apply(self, params, obs):
+        """-> (pi_out, value). pi_out: logits (discrete) or mean."""
+        h = self.trunk(params, obs)
+        pi = h @ params["pi"]["w"] + params["pi"]["b"]
+        v = (h @ params["v"]["w"] + params["v"]["b"])[..., 0]
+        return pi, v
+
+    # -- distributions -------------------------------------------------
+    def sample(self, params, obs, key):
+        """-> (action, log_prob)."""
+        pi, _ = self.apply(params, obs)
+        if self.discrete:
+            a = jax.random.categorical(key, pi)
+            logp = jax.nn.log_softmax(pi)[
+                ..., a] if pi.ndim == 1 else jnp.take_along_axis(
+                jax.nn.log_softmax(pi), a[..., None], -1)[..., 0]
+            return a, logp
+        std = jnp.exp(params["log_std"])
+        eps = jax.random.normal(key, pi.shape)
+        a = pi + std * eps
+        logp = (-0.5 * ((a - pi) / std) ** 2
+                - jnp.log(std) - 0.5 * jnp.log(2 * jnp.pi)).sum(-1)
+        return jnp.tanh(a) * 2.0, logp  # scaled for pendulum torque
+
+    def log_prob(self, params, obs, action):
+        pi, v = self.apply(params, obs)
+        if self.discrete:
+            lp = jnp.take_along_axis(jax.nn.log_softmax(pi),
+                                     action[..., None].astype(jnp.int32),
+                                     -1)[..., 0]
+            ent = -jnp.sum(jax.nn.softmax(pi) * jax.nn.log_softmax(pi), -1)
+            return lp, v, ent
+        # invert the tanh scaling
+        raw = jnp.arctanh(jnp.clip(action / 2.0, -0.999, 0.999))
+        std = jnp.exp(params["log_std"])
+        lp = (-0.5 * ((raw - pi) / std) ** 2
+              - jnp.log(std) - 0.5 * jnp.log(2 * jnp.pi)).sum(-1)
+        ent = (0.5 + 0.5 * jnp.log(2 * jnp.pi) +
+               jnp.log(std)).sum() * jnp.ones_like(v)
+        return lp, v, ent
+
+
+class TrunkPolicy:
+    """Any registry architecture as a policy trunk (survey §2 LLM-actor
+    mapping): integer token observation -> transformer -> policy/value
+    heads. Used by examples/ppo_trunk_gridworld.py."""
+
+    def __init__(self, arch="paper-drl-trunk", n_actions=4, ctx=8,
+                 reduced=True):
+        from repro.models import build_model
+        from repro.models.model import ModelOpts
+        self.lm = build_model(arch, ModelOpts(dtype="float32", remat=False),
+                              reduced=reduced)
+        self.n_actions = n_actions
+        self.ctx = ctx
+        self.discrete = True
+        self.obs_dim = ctx
+
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        d = self.lm.cfg.d_model
+        return {"lm": self.lm.init(k1),
+                "pi": {"w": dense_init(k2, (d, self.n_actions),
+                                       scale=0.01),
+                       "b": jnp.zeros((self.n_actions,))},
+                "v": {"w": dense_init(k3, (d, 1)), "b": jnp.zeros((1,))}}
+
+    def apply(self, params, tokens):
+        """tokens: (..., ctx) int32 history of token observations."""
+        tok = tokens.astype(jnp.int32) % self.lm.cfg.vocab
+        squeeze = tok.ndim == 1
+        if squeeze:
+            tok = tok[None]
+        from repro.models.layers import (embed_tokens, apply_norm)
+        x = embed_tokens(params["lm"]["embed"], tok, self.lm.cfg,
+                         jnp.float32)
+        x, _, _ = self.lm._run_seq(params["lm"], x, jnp.int32(0), None, 0)
+        h = apply_norm(params["lm"]["final_norm"], x)[:, -1]
+        pi = h @ params["pi"]["w"] + params["pi"]["b"]
+        v = (h @ params["v"]["w"] + params["v"]["b"])[..., 0]
+        if squeeze:
+            pi, v = pi[0], v[0]
+        return pi, v
+
+    sample = MLPPolicy.sample
+    log_prob = MLPPolicy.log_prob

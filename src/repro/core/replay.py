@@ -1,0 +1,90 @@
+"""Experience replay (survey §3: Gorila/Ape-X Replay Memory component).
+
+Pure-functional fixed-capacity buffers living on device:
+  * `UniformReplay` — Gorila-style uniform sampling.
+  * `PrioritizedReplay` — Ape-X style proportional prioritization
+    p_i ∝ |TD_i|^α with importance-sampling weights w_i ∝ (N p_i)^{-β};
+    sampling via categorical over log-priorities (TPU-friendly — no
+    host-side sum-tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class UniformReplay:
+    capacity: int
+
+    def init(self, example: Any):
+        store = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((self.capacity,) + jnp.shape(a),
+                                jnp.asarray(a).dtype), example)
+        return {"store": store, "ptr": jnp.zeros((), jnp.int32),
+                "size": jnp.zeros((), jnp.int32)}
+
+    def add_batch(self, state, batch):
+        """batch: pytree with leading dim n (n <= capacity)."""
+        n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        idx = (state["ptr"] + jnp.arange(n)) % self.capacity
+        store = jax.tree_util.tree_map(
+            lambda s, b: s.at[idx].set(b), state["store"], batch)
+        return {"store": store, "ptr": (state["ptr"] + n) % self.capacity,
+                "size": jnp.minimum(state["size"] + n, self.capacity)}
+
+    def sample(self, state, key, n):
+        idx = jax.random.randint(key, (n,), 0, jnp.maximum(state["size"],
+                                                           1))
+        return jax.tree_util.tree_map(lambda s: s[idx], state["store"]), idx
+
+
+@dataclasses.dataclass
+class PrioritizedReplay:
+    capacity: int
+    alpha: float = 0.6
+    beta: float = 0.4
+    eps: float = 1e-6
+
+    def init(self, example: Any):
+        store = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((self.capacity,) + jnp.shape(a),
+                                jnp.asarray(a).dtype), example)
+        return {"store": store, "prio": jnp.zeros((self.capacity,)),
+                "ptr": jnp.zeros((), jnp.int32),
+                "size": jnp.zeros((), jnp.int32)}
+
+    def add_batch(self, state, batch, priorities=None):
+        n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        idx = (state["ptr"] + jnp.arange(n)) % self.capacity
+        store = jax.tree_util.tree_map(
+            lambda s, b: s.at[idx].set(b), state["store"], batch)
+        if priorities is None:  # new samples get max priority (Ape-X)
+            priorities = jnp.full((n,), jnp.maximum(
+                state["prio"].max(), 1.0))
+        prio = state["prio"].at[idx].set(priorities)
+        return {"store": store, "prio": prio,
+                "ptr": (state["ptr"] + n) % self.capacity,
+                "size": jnp.minimum(state["size"] + n, self.capacity)}
+
+    def sample(self, state, key, n):
+        """-> (batch, idx, is_weights). Proportional sampling WITH
+        replacement: idx ~ p_i^α via categorical over log-priorities
+        (TPU-friendly; no host-side sum-tree)."""
+        valid = jnp.arange(self.capacity) < state["size"]
+        logits = self.alpha * jnp.log(state["prio"] + self.eps)
+        logits = jnp.where(valid, logits, -jnp.inf)
+        idx = jax.random.categorical(key, logits, shape=(n,))
+        probs = jax.nn.softmax(logits)
+        N = jnp.maximum(state["size"], 1)
+        w = (N * probs[idx] + 1e-12) ** (-self.beta)
+        w = w / jnp.maximum(w.max(), 1e-12)
+        batch = jax.tree_util.tree_map(lambda s: s[idx], state["store"])
+        return batch, idx, w
+
+    def update_priorities(self, state, idx, td_errors):
+        prio = state["prio"].at[idx].set(jnp.abs(td_errors) + self.eps)
+        return dict(state, prio=prio)

@@ -1,0 +1,70 @@
+"""Actor-side vectorized rollout engine (survey §3 Actor role).
+
+One jitted `lax.scan` advances B environments T steps: policy inference,
+env dynamics and auto-reset all fuse into a single XLA program — the
+zero-copy batch-simulation pipeline of survey §4.2/Fig. 5(b).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def rollout(policy, params, env, key, env_state, T):
+    """Collect T steps from a batch of envs.
+
+    Returns (trajectory, final_env_state). trajectory arrays are
+    time-major (T, B, ...): obs, action, logp, value, reward, done.
+    """
+    n = jax.tree_util.tree_leaves(env_state)[0].shape[0]
+
+    def step(carry, key_t):
+        env_state = carry
+        obs = jax.vmap(env.obs)(env_state)
+        ka, kr = jax.random.split(key_t)
+        action, logp = policy.sample(params, obs, ka)
+        _, value = policy.apply(params, obs)
+        env_state, _, reward, done = env.step_autoreset(
+            env_state, action, kr)
+        return env_state, {"obs": obs, "action": action, "logp": logp,
+                           "value": value, "reward": reward, "done": done}
+
+    keys = jax.random.split(key, T)
+    env_state, traj = jax.lax.scan(step, env_state, keys)
+    return traj, env_state
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "env", "T", "n"))
+def rollout_fresh(policy, params, env, key, T, n):
+    """Rollout from freshly-reset envs (jitted end-to-end)."""
+    k0, k1 = jax.random.split(key)
+    env_state = env.reset_batch(k0, n)
+    return rollout(policy, params, env, k1, env_state, T)
+
+
+def episode_return(policy, params, env, key, max_steps=200):
+    """Deterministic-ish single-episode return (greedy for discrete,
+    mean action for continuous) — the ES/GA fitness function."""
+    state = env.reset(key)
+
+    def step(carry, _):
+        state, done, total = carry
+        obs = env.obs(state)
+        pi, _ = policy.apply(params, obs)
+        if policy.discrete:
+            action = jnp.argmax(pi, axis=-1)
+        else:
+            action = jnp.tanh(pi) * 2.0
+        nstate, _, reward, ndone = env.step(state, action)
+        total = total + jnp.where(done, 0.0, reward)
+        ndone = done | ndone
+        state = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(done, a, b), state, nstate)
+        return (state, ndone, total), None
+
+    (_, _, total), _ = jax.lax.scan(
+        step, (state, jnp.zeros((), bool), jnp.zeros(())),
+        None, length=max_steps)
+    return total

@@ -1,0 +1,93 @@
+"""System-architecture topologies (survey §3, Fig. 3) as gradient/param
+exchange strategies over a named mesh axis, usable inside shard_map.
+
+  * `allreduce` — decentralized (IMPALA/rlpyt/DD-PPO): lax.pmean; lowers
+    to all-reduce over the ring.
+  * `ps` — centralized parameter-server star: every worker all-gathers
+    the raw gradients then reduces locally. Mathematically identical to
+    all-reduce but lowers to a gather+broadcast collective schedule —
+    the honest SPMD rendering of the star topology (DESIGN.md §4.2),
+    and measurably worse in collective bytes (benchmarks/fig3).
+  * `gossip` — peer-to-peer (GALA, survey §3.3): no gradient exchange;
+    instead params are averaged with the ring neighbour each step via
+    lax.ppermute. Workers' models stay ε-close rather than identical
+    (property-tested in tests/test_topology.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+TOPOLOGIES = ("allreduce", "ps", "gossip")
+
+
+def exchange_grads(grads, axis: str, topology: str):
+    """Aggregate per-worker grads according to the topology. For gossip,
+    grads are returned unchanged (aggregation happens on params)."""
+    if topology == "allreduce":
+        return jax.tree_util.tree_map(
+            lambda g: jax.lax.pmean(g, axis), grads)
+    if topology == "ps":
+        def star(g):
+            gathered = jax.lax.all_gather(g, axis)   # star: to the center
+            return jnp.mean(gathered, axis=0)        # PS reduce+broadcast
+        return jax.tree_util.tree_map(star, grads)
+    if topology == "gossip":
+        return grads
+    raise ValueError(topology)
+
+
+def gossip_mix(params, axis: str, hops: int = 1):
+    """One gossip round: average params with the ring neighbour(s)."""
+    n = jax.lax.axis_size(axis)
+    mixed = params
+    for h in range(hops):
+        d = 2 ** h
+        perm = [(i, (i + d) % n) for i in range(n)]
+        nbr = jax.tree_util.tree_map(
+            lambda p: jax.lax.ppermute(p, axis, perm), mixed)
+        mixed = jax.tree_util.tree_map(
+            lambda a, b: 0.5 * (a + b), mixed, nbr)
+    return mixed
+
+
+def make_distributed_step(loss_fn, optimizer, topology: str, mesh,
+                          axis: str = "workers"):
+    """Build a jitted multi-worker training step over `mesh[axis]`.
+
+    Worker-local state: (params, opt_state). Batch is sharded over the
+    worker axis. allreduce/ps keep replicas bit-identical; gossip lets
+    them drift ε-close.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def worker_step(params, opt_state, batch):
+        # shard_map keeps the (length-1) worker dim — strip and restore
+        sq = lambda t: jax.tree_util.tree_map(
+            lambda a: jnp.squeeze(a, 0), t)
+        ex = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
+        params, opt_state, batch = sq(params), sq(opt_state), sq(batch)
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads = exchange_grads(grads, axis, topology)
+        params, opt_state = optimizer.apply(params, opt_state, grads)
+        if topology == "gossip":
+            params = gossip_mix(params, axis)
+        return ex(params), ex(opt_state), jax.lax.pmean(loss, axis)
+
+    # params replicated per-worker => leading worker axis on every leaf
+    pspec = P(axis)
+    step = shard_map(worker_step, mesh=mesh,
+                     in_specs=(pspec, pspec, pspec),
+                     out_specs=(pspec, pspec, P()),
+                     check_rep=False)
+    return jax.jit(step)
+
+
+def replicate_for(mesh, axis, params):
+    """Stack params with a leading worker axis (one replica per worker)."""
+    n = mesh.shape[axis]
+    return jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p, (n,) + p.shape), params)

@@ -1,0 +1,24 @@
+"""V-trace off-policy correction (IMPALA, survey §6.1) — public API.
+
+Dispatches to the Pallas kernel on TPU and the lax.scan reference
+elsewhere; both share the oracle in kernels/vtrace/ref.py.
+"""
+from repro.kernels.common import interpret_mode
+from repro.kernels.vtrace.ref import vtrace_ref
+
+
+def vtrace(log_rhos, discounts, rewards, values, bootstrap,
+           clip_rho=1.0, clip_c=1.0, use_kernel=False):
+    if use_kernel and not interpret_mode():
+        from repro.kernels.vtrace.ops import vtrace as vtrace_k
+        return vtrace_k(log_rhos, discounts, rewards, values, bootstrap,
+                        clip_rho=clip_rho, clip_c=clip_c)
+    return vtrace_ref(log_rhos, discounts, rewards, values, bootstrap,
+                      clip_rho=clip_rho, clip_c=clip_c)
+
+
+def epsilon_correction(logp, eps=1e-6):
+    """GA3C ε-correction (survey §6.1): bound log-prob away from -inf to
+    avoid numerical instability in async gradient estimation."""
+    import jax.numpy as jnp
+    return jnp.log(jnp.exp(logp) + eps)

@@ -1,0 +1,4 @@
+from repro.envs.api import Env  # noqa: F401
+from repro.envs.cartpole import CartPole  # noqa: F401
+from repro.envs.pendulum import Pendulum  # noqa: F401
+from repro.envs.gridworld import GridWorld  # noqa: F401

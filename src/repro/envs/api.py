@@ -1,0 +1,51 @@
+"""Zero-copy batch environment API (survey §4.2, TPU-native).
+
+Environments are pure functions over jnp state — `reset`/`step` fuse into
+the same XLA program as policy inference and the optimizer, so there is
+no host↔device traffic at all (the TPU adaptation of Isaac Gym's
+"Tensor API" zero-copy design). Batch simulation = `jax.vmap`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Env:
+    """Single-instance pure-functional environment; vmap for batches."""
+    obs_dim: int
+    n_actions: int = 0        # 0 -> continuous
+    act_dim: int = 1
+
+    def reset(self, key) -> dict:
+        raise NotImplementedError
+
+    def step(self, state: dict, action) -> Tuple[dict, jnp.ndarray,
+                                                 jnp.ndarray, jnp.ndarray]:
+        """-> (state, obs, reward, done)"""
+        raise NotImplementedError
+
+    def obs(self, state: dict) -> jnp.ndarray:
+        raise NotImplementedError
+
+    # -- batched convenience -----------------------------------------
+    def reset_batch(self, key, n):
+        return jax.vmap(self.reset)(jax.random.split(key, n))
+
+    def step_batch(self, state, action):
+        return jax.vmap(self.step)(state, action)
+
+    def step_autoreset(self, state, action, key):
+        """Vectorized step with per-env auto-reset on done (the standard
+        batch-simulation pattern — episodes never block the batch)."""
+        new_state, obs, reward, done = self.step_batch(state, action)
+        n = done.shape[0]
+        fresh = jax.vmap(self.reset)(jax.random.split(key, n))
+        sel = lambda a, b: jnp.where(
+            done.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+        state = jax.tree_util.tree_map(sel, fresh, new_state)
+        obs = jax.vmap(self.obs)(state)
+        return state, obs, reward, done

@@ -1,0 +1,48 @@
+"""CartPole-v1 dynamics in pure jnp (discrete, 2 actions)."""
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import Env
+
+
+class CartPole(Env):
+    obs_dim = 4
+    n_actions = 2
+
+    gravity = 9.8
+    masscart = 1.0
+    masspole = 0.1
+    length = 0.5
+    force_mag = 10.0
+    tau = 0.02
+    x_lim = 2.4
+    theta_lim = 12 * jnp.pi / 180
+    max_steps = 200
+
+    def reset(self, key):
+        s = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
+        return {"s": s, "t": jnp.zeros((), jnp.int32)}
+
+    def obs(self, state):
+        return state["s"]
+
+    def step(self, state, action):
+        x, x_dot, th, th_dot = state["s"]
+        force = jnp.where(action > 0, self.force_mag, -self.force_mag)
+        total_mass = self.masscart + self.masspole
+        pml = self.masspole * self.length
+        costh, sinth = jnp.cos(th), jnp.sin(th)
+        temp = (force + pml * th_dot ** 2 * sinth) / total_mass
+        th_acc = (self.gravity * sinth - costh * temp) / (
+            self.length * (4.0 / 3.0 - self.masspole * costh ** 2
+                           / total_mass))
+        x_acc = temp - pml * th_acc * costh / total_mass
+        x = x + self.tau * x_dot
+        x_dot = x_dot + self.tau * x_acc
+        th = th + self.tau * th_dot
+        th_dot = th_dot + self.tau * th_acc
+        s = jnp.stack([x, x_dot, th, th_dot])
+        t = state["t"] + 1
+        done = ((jnp.abs(x) > self.x_lim) | (jnp.abs(th) > self.theta_lim)
+                | (t >= self.max_steps))
+        return ({"s": s, "t": t}, s, jnp.float32(1.0), done)

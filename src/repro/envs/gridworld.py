@@ -1,0 +1,38 @@
+"""N×N gridworld with a fixed goal (discrete, 4 actions) — the
+token-friendly env used to drive transformer-trunk policies."""
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import Env
+
+
+class GridWorld(Env):
+    n_actions = 4
+
+    def __init__(self, n=8, max_steps=64):
+        self.n = n
+        self.max_steps = max_steps
+        self.obs_dim = 4  # (x, y, gx, gy) normalized
+        self.goal = jnp.array([n - 1, n - 1])
+
+    def reset(self, key):
+        pos = jax.random.randint(key, (2,), 0, self.n)
+        return {"pos": pos, "t": jnp.zeros((), jnp.int32)}
+
+    def obs(self, state):
+        return jnp.concatenate([state["pos"], self.goal]
+                               ).astype(jnp.float32) / self.n
+
+    def step(self, state, action):
+        delta = jnp.array([[0, 1], [0, -1], [1, 0], [-1, 0]])[action]
+        pos = jnp.clip(state["pos"] + delta, 0, self.n - 1)
+        t = state["t"] + 1
+        at_goal = jnp.all(pos == self.goal)
+        reward = jnp.where(at_goal, 1.0, -0.01)
+        done = at_goal | (t >= self.max_steps)
+        s = {"pos": pos, "t": t}
+        return s, self.obs(s), reward, done
+
+    def token_obs(self, state):
+        """Integer token encoding (for transformer-trunk policies)."""
+        return state["pos"][0] * self.n + state["pos"][1]

@@ -1,0 +1,46 @@
+"""Pendulum-v1 dynamics in pure jnp (continuous torque)."""
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import Env
+
+
+def _angle_normalize(x):
+    return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+
+
+class Pendulum(Env):
+    obs_dim = 3
+    n_actions = 0
+    act_dim = 1
+
+    max_speed = 8.0
+    max_torque = 2.0
+    dt = 0.05
+    g = 10.0
+    m = 1.0
+    l = 1.0
+    max_steps = 200
+
+    def reset(self, key):
+        k1, k2 = jax.random.split(key)
+        th = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
+        thdot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+        return {"th": th, "thdot": thdot, "t": jnp.zeros((), jnp.int32)}
+
+    def obs(self, state):
+        return jnp.stack([jnp.cos(state["th"]), jnp.sin(state["th"]),
+                          state["thdot"] / self.max_speed])
+
+    def step(self, state, action):
+        u = jnp.clip(action.reshape(()), -self.max_torque, self.max_torque)
+        th, thdot = state["th"], state["thdot"]
+        cost = (_angle_normalize(th) ** 2 + 0.1 * thdot ** 2
+                + 0.001 * u ** 2)
+        thdot = thdot + (3 * self.g / (2 * self.l) * jnp.sin(th)
+                         + 3.0 / (self.m * self.l ** 2) * u) * self.dt
+        thdot = jnp.clip(thdot, -self.max_speed, self.max_speed)
+        th = th + thdot * self.dt
+        t = state["t"] + 1
+        s = {"th": th, "thdot": thdot, "t": t}
+        return s, self.obs(s), -cost, t >= self.max_steps

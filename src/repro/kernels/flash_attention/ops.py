@@ -1,0 +1,22 @@
+"""Jit'd public wrapper matching the model's (B,S,KVH,G,D) layout."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_hsd
+
+
+def flash_attention(qg, k, v, *, causal=True, window=0, bq=128, bk=128):
+    """qg: (B,S,KVH,G,D); k,v: (B,S,KVH,D). Returns (B,S,KVH,G,D)."""
+    B, S, KVH, G, D = qg.shape
+    q = qg.transpose(0, 2, 3, 1, 4).reshape(B, KVH * G, S, D)
+    kk = k.transpose(0, 2, 1, 3)
+    vv = v.transpose(0, 2, 1, 3)
+    pad = (-S) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kk = jnp.pad(kk, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vv = jnp.pad(vv, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    o = flash_attention_hsd(q, kk, vv, causal=causal, window=window,
+                            bq=bq, bk=bk)
+    o = o[:, :, :S]
+    return o.reshape(B, KVH, G, S, D).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,16 @@
+"""Jit'd wrapper: pad (C,d,f) to tile multiples, call the Pallas gmm."""
+import jax.numpy as jnp
+
+from repro.kernels.gmm.kernel import gmm_ecd
+
+
+def gmm(x, w, bc=128, bf=128, bd=512):
+    """x: (E,C,d) @ w: (E,d,f) -> (E,C,f), per expert."""
+    E, C, d = x.shape
+    f = w.shape[-1]
+    bc_, bf_, bd_ = min(bc, C), min(bf, f), min(bd, d)
+    pc, pf, pd = (-C) % bc_, (-f) % bf_, (-d) % bd_
+    xp = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+    wp = jnp.pad(w.astype(x.dtype), ((0, 0), (0, pd), (0, pf)))
+    o = gmm_ecd(xp, wp, bc=bc_, bf=bf_, bd=bd_)
+    return o[:, :C, :f]

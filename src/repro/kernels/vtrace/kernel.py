@@ -1,0 +1,66 @@
+"""Pallas-TPU V-trace kernel.
+
+The backward recursion is inherently serial in T, but embarrassingly
+parallel in batch — grid (nb,) tiles the batch across cores while the
+whole (T, bb) trajectory block sits in VMEM (T≤2048, bb=128 → ~4 MiB for
+the four inputs). One fori_loop runs the recursion entirely in-register.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_mode, compiler_params
+
+
+def _kernel(rho_ref, disc_ref, rew_ref, val_ref, boot_ref,
+            vs_ref, adv_ref, *, T, clip_rho, clip_c):
+    rhos = jnp.minimum(clip_rho, jnp.exp(rho_ref[...]))    # (T,bb)
+    cs = jnp.minimum(clip_c, jnp.exp(rho_ref[...]))
+    disc = disc_ref[...]
+    rew = rew_ref[...]
+    val = val_ref[...]
+    boot = boot_ref[...]                                   # (1,bb)
+
+    def step(i, carry):
+        acc, vs = carry
+        t = T - 1 - i
+        v_tp1 = jnp.where(t == T - 1, boot[0], val[jnp.minimum(t + 1,
+                                                               T - 1)])
+        delta = rhos[t] * (rew[t] + disc[t] * v_tp1 - val[t])
+        acc = delta + disc[t] * cs[t] * acc
+        vs = vs.at[t].set(val[t] + acc)
+        return acc, vs
+
+    acc0 = jnp.zeros_like(boot[0])
+    vs0 = jnp.zeros_like(val)
+    _, vs = jax.lax.fori_loop(0, T, step, (acc0, vs0))
+    vs_tp1 = jnp.concatenate([vs[1:], boot], axis=0)
+    adv = rhos * (rew + disc * vs_tp1 - val)
+    vs_ref[...] = vs
+    adv_ref[...] = adv
+
+
+@functools.partial(jax.jit, static_argnames=("clip_rho", "clip_c", "bb"))
+def vtrace_tb(log_rhos, discounts, rewards, values, bootstrap,
+              clip_rho=1.0, clip_c=1.0, bb=128):
+    """Inputs (T,B) f32 time-major, bootstrap (B,); B % bb == 0
+    (wrapper pads). Returns (vs, pg_adv)."""
+    T, B = log_rhos.shape
+    nb = B // bb
+    kernel = functools.partial(_kernel, T=T, clip_rho=clip_rho,
+                               clip_c=clip_c)
+    spec = pl.BlockSpec((T, bb), lambda ib: (0, ib))
+    vs, adv = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, bb), lambda ib: (0, ib))],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct((T, B), jnp.float32),
+                   jax.ShapeDtypeStruct((T, B), jnp.float32)),
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret_mode(),
+    )(log_rhos, discounts, rewards, values, bootstrap[None])
+    return vs, adv

@@ -1,0 +1,31 @@
+"""Reference V-trace (IMPALA, Espeholt et al. 2018) via lax.scan.
+
+    δ_t  = ρ_t (r_t + γ_t V_{t+1} − V_t)
+    vs_t = V_t + δ_t + γ_t c_t (vs_{t+1} − V_{t+1})
+    adv_t = ρ_t (r_t + γ_t vs_{t+1} − V_t)
+with ρ_t = min(ρ̄, w_t), c_t = min(c̄, w_t), w_t the IS ratio.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def vtrace_ref(log_rhos, discounts, rewards, values, bootstrap,
+               clip_rho=1.0, clip_c=1.0):
+    """All inputs (T, B) time-major; values V_t; bootstrap V_T (B,).
+    Returns (vs (T,B), pg_advantages (T,B))."""
+    rhos = jnp.minimum(clip_rho, jnp.exp(log_rhos))
+    cs = jnp.minimum(clip_c, jnp.exp(log_rhos))
+    values_tp1 = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
+    deltas = rhos * (rewards + discounts * values_tp1 - values)
+
+    def body(acc, xs):
+        delta, disc, c = xs
+        acc = delta + disc * c * acc
+        return acc, acc
+
+    _, dvs = jax.lax.scan(body, jnp.zeros_like(bootstrap),
+                          (deltas, discounts, cs), reverse=True)
+    vs = values + dvs
+    vs_tp1 = jnp.concatenate([vs[1:], bootstrap[None]], axis=0)
+    pg_adv = rhos * (rewards + discounts * vs_tp1 - values)
+    return jax.lax.stop_gradient(vs), jax.lax.stop_gradient(pg_adv)

@@ -1,0 +1,18 @@
+"""Jit'd wrapper: pad T, call the chunked Pallas WKV-6 kernel."""
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_btHN
+
+
+def wkv6(r, k, v, logw, u, chunk=64):
+    """r,k,v,logw: (B,T,H,N); u: (H,N). Zero initial state."""
+    T = r.shape[1]
+    pad = (-T) % chunk
+    if pad:
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(a, pad4) for a in (r, k, v))
+        logw = jnp.pad(logw, pad4)
+    y = wkv6_btHN(r.astype(jnp.float32), k.astype(jnp.float32),
+                  v.astype(jnp.float32), logw.astype(jnp.float32),
+                  u.astype(jnp.float32), chunk=chunk)
+    return y[:, :T]

@@ -1,0 +1,24 @@
+"""Per-timestep scan oracle for the RWKV-6 WKV recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u, state=None):
+    """r,k,v,logw: (B,T,H,N) f32; u: (H,N). Returns (y (B,T,H,N), S).
+        y_t = r_t · (S_{t-1} + u ⊙ k_t v_tᵀ);  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    """
+    B, T, H, N = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, lwt = xs
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt,
+                       S + u[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, logw))
+    S, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), S

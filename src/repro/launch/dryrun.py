@@ -1,0 +1,372 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh)
+combination against the production mesh and extract the roofline terms.
+
+MUST set the host-device count before ANY other import (jax locks the
+device count on first init) — hence the first two lines.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k [--multi-pod] [--fsdp] [--param-dtype bfloat16]
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # full 40-pair sweep
+Results are appended as JSON under experiments/dryrun/.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_FLAGS")
+                           or "--xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch import analytic
+from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16,
+                               HBM_BW, ICI_BW)
+from repro.launch.sharding import (shard_params, batch_sharding,
+                                   cache_sharding)
+from repro.models import build_model
+from repro.models.model import ModelOpts
+from repro.optim import adamw
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../experiments/dryrun")
+
+# per-arch memory-fit decisions (DESIGN.md §5): big models train with
+# bf16 params + ZeRO-3 over the data axis.
+ARCH_OVERRIDES = {
+    "llama4-maverick-400b-a17b": {"param_dtype": "bfloat16", "fsdp": True},
+    "jamba-v0.1-52b": {"param_dtype": "bfloat16", "fsdp": True},
+    "deepseek-moe-16b": {"fsdp": True},
+    "minicpm3-4b": {"fsdp": True},
+}
+
+def _cast_struct(struct, dtype):
+    def cast(leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(leaf.shape, jnp.dtype(dtype))
+        return leaf
+    return jax.tree_util.tree_map(cast, struct)
+
+
+def _replicated_like(mesh, struct):
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), struct)
+
+
+def build_case(arch: str, shape_name: str, mesh, param_dtype="float32",
+               fsdp=False, model_opts=None, policy="baseline"):
+    """Returns (fn, arg_structs, in_shardings, meta)."""
+    cfg = get_config(arch)
+    shape_cfg = SHAPES[shape_name]
+    opts = model_opts or ModelOpts(dtype="bfloat16", remat=True)
+    model = build_model(cfg, opts)
+    specs = model.input_specs(shape_cfg)
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    params_struct = _cast_struct(params_struct, param_dtype)
+    params_shard = shard_params(params_struct, mesh, fsdp=fsdp,
+                                policy=policy)
+
+    if shape_cfg.mode == "train":
+        optimizer = adamw(1e-4)
+        opt_struct = jax.eval_shape(optimizer.init, params_struct)
+        opt_shard = {"step": NamedSharding(mesh, P()),
+                     "m": shard_params(opt_struct["m"], mesh, fsdp=fsdp,
+                                       policy=policy),
+                     "v": shard_params(opt_struct["v"], mesh, fsdp=fsdp,
+                                       policy=policy)}
+        batch_struct = specs["batch"]
+        b_shard = batch_sharding(mesh, batch_struct, policy)
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            params, opt_state = optimizer.apply(params, opt_state, grads)
+            return params, opt_state, loss
+
+        return (train_step, (params_struct, opt_struct, batch_struct),
+                (params_shard, opt_shard, b_shard),
+                {"model": model, "cfg": cfg, "shape": shape_cfg})
+
+    if shape_cfg.mode == "prefill":
+        tok_struct = specs["tokens"]
+        args = [tok_struct]
+        shards = [batch_sharding(mesh, tok_struct, policy)]
+        if "frontend" in specs:
+            args.append(specs["frontend"])
+            shards.append(batch_sharding(mesh, specs["frontend"],
+                                          policy))
+
+        def prefill_step(params, tokens, *rest):
+            fe = rest[0] if rest else None
+            return model.prefill(params, tokens, fe)
+
+        return (prefill_step, (params_struct, *args),
+                (params_shard, *shards),
+                {"model": model, "cfg": cfg, "shape": shape_cfg})
+
+    # decode
+    tok = specs["token"]
+    cache = specs["cache"]
+    pos = specs["pos"]
+    cache_shard = cache_sharding(mesh, cache, shape_cfg.global_batch)
+
+    def serve_step(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos)
+
+    return (serve_step, (params_struct, tok, cache, pos),
+            (params_shard, batch_sharding(mesh, tok), cache_shard,
+             NamedSharding(mesh, P())),
+            {"model": model, "cfg": cfg, "shape": shape_cfg})
+
+
+def stack_probe_collectives(model, shape_cfg, mesh, params_struct,
+                            fsdp, param_dtype, policy="baseline"):
+    """Per-device collective bytes of ONE scanned super-block, lowered
+    standalone under the same shardings. The full program's HLO counts
+    the scan body once; total collectives = top-level + repeats × probe.
+    (Gradient is taken wrt activations only — the data-axis param-grad
+    all-reduce happens once at top level in the real program and is
+    already counted there.)"""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models import blocks as blk
+
+    if model.repeats < 1 or "stack" not in params_struct:
+        return {"total": 0}, 0
+    cfg = model.cfg
+    sds = jax.ShapeDtypeStruct
+    sb_struct = jax.tree_util.tree_map(
+        lambda a: sds(a.shape[1:], a.dtype), params_struct["stack"])
+    sb_shard = shard_params(sb_struct, mesh, fsdp=fsdp, policy=policy)
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    if cfg.frontend == "vision_stub" and shape_cfg.mode != "decode":
+        S = S + cfg.frontend_tokens
+    baxes = (("pod", "data", "model") if policy == "pure_dp"
+             else ("pod", "data"))
+    bsz = 1
+    for a in baxes:
+        bsz *= mesh.shape.get(a, 1)
+    bx = tuple(a for a in baxes if a in mesh.axis_names)
+    bleaf = bx if (B % bsz == 0 and B >= bsz) else None
+    act_dt = model.opts.jdtype
+    mode = shape_cfg.mode
+
+    if mode in ("train", "prefill"):
+        x_struct = sds((B, S, cfg.d_model), act_dt)
+        x_shard = NamedSharding(mesh, P(bleaf, None, None))
+
+        def probe(sbp, x):
+            def f(x):
+                y = x
+                for t in range(model.period):
+                    y, _, aux = blk.apply_block_seq(
+                        cfg, sbp[f"t{t}"], model.stack_specs[t][0],
+                        model.stack_specs[t][1], y, jnp.int32(0),
+                        model.attn_opts,
+                        cache_capacity=(0 if mode == "train" else S + 1),
+                        gelu_mlp=model.gelu_mlp)
+                return y.astype(jnp.float32).mean()
+            if mode == "train":
+                return jax.grad(f)(x)
+            return f(x)
+
+        args = (sb_struct, x_struct)
+        shards = (sb_shard, x_shard)
+    else:  # decode
+        x_struct = sds((B, 1, cfg.d_model), act_dt)
+        x_shard = NamedSharding(mesh, P(bleaf, None, None))
+        sb_cache = jax.eval_shape(
+            lambda: {f"t{t}": blk.init_cache(
+                cfg, model.stack_specs[t][0], B, S + 1, act_dt,
+                has_cross=model.has_cross, enc_tokens=cfg.enc_tokens)
+                for t in range(model.period)})
+        cshard = cache_sharding(mesh, sb_cache, B)
+
+        def probe(sbp, x, cache):
+            y = x
+            for t in range(model.period):
+                y, _, _ = blk.apply_block_decode(
+                    cfg, sbp[f"t{t}"], model.stack_specs[t][0],
+                    model.stack_specs[t][1], y, cache[f"t{t}"],
+                    jnp.int32(S), model.attn_opts,
+                    gelu_mlp=model.gelu_mlp)
+            return y
+
+        args = (sb_struct, x_struct, sb_cache)
+        shards = (sb_shard, x_shard, cshard)
+
+    with mesh:
+        lowered = jax.jit(probe, in_shardings=shards).lower(*args)
+        compiled = lowered.compile()
+    return collective_bytes(compiled.as_text()), model.repeats
+
+
+def model_flops(cfg, shape_cfg):
+    """6·N·D (dense) / 6·N_active·D (MoE) — the useful-FLOPs yardstick."""
+    n_active = cfg.param_count(active_only=True)
+    if shape_cfg.mode == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6 * n_active * tokens
+    if shape_cfg.mode == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2 * n_active * tokens
+    return 2 * n_active * shape_cfg.global_batch  # decode: 1 token
+
+
+def applicable(cfg, shape_name):
+    if shape_name == "long_500k" and not cfg.subquadratic():
+        return False, "pure full-attention arch: 500k decode skipped " \
+                      "(DESIGN.md §6)"
+    return True, ""
+
+
+def dryrun_one(arch, shape_name, *, multi_pod=False, mesh_shape=None,
+               param_dtype=None, fsdp=None, model_opts=None, save=True,
+               tag="", policy="baseline"):
+    cfg = get_config(arch)
+    ok, why = applicable(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi_pod" if multi_pod else "single_pod", "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _save(rec, save)
+        return rec
+    ov = ARCH_OVERRIDES.get(arch, {})
+    param_dtype = param_dtype or ov.get("param_dtype", "float32")
+    fsdp = ov.get("fsdp", False) if fsdp is None else fsdp
+    rec.update(param_dtype=param_dtype, fsdp=fsdp, policy=policy)
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    t0 = time.time()
+    try:
+        fn, structs, shardings, meta = build_case(
+            arch, shape_name, mesh, param_dtype, fsdp, model_opts,
+            policy=policy)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=shardings).lower(*structs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        try:
+            mem = compiled.memory_analysis()
+        except Exception:
+            mem = None
+        coll_top = collective_bytes(compiled.as_text())
+        try:
+            coll_probe, repeats = stack_probe_collectives(
+                meta["model"], meta["shape"], mesh, structs[0], fsdp,
+                param_dtype, policy=policy)
+        except Exception as e:
+            coll_probe, repeats = {"total": 0}, 0
+            rec["probe_error"] = f"{type(e).__name__}: {e}"
+        # scan correction: full HLO counts the scan body once
+        coll_total = coll_top["total"] + max(repeats - 1, 0) \
+            * coll_probe["total"]
+        chips = mesh.devices.size
+        hlo_flops = float(ca.get("flops", 0.0)) if ca else 0.0
+        hlo_bytes = float(ca.get("bytes accessed", 0.0)) if ca else 0.0
+        mf = model_flops(meta["cfg"], meta["shape"])
+        a_flops = analytic.step_flops(
+            meta["cfg"], meta["shape"],
+            remat=meta["model"].opts.remat) / chips
+        eff_model_axis = (1 if policy == "pure_dp"
+                          else mesh.shape.get("model", 1))
+        a_bytes = analytic.step_hbm_bytes(
+            meta["cfg"], meta["shape"], chips,
+            param_bytes=jnp.dtype(param_dtype).itemsize,
+            fsdp=fsdp, model_axis=eff_model_axis,
+            data_axis=mesh.shape.get("data", 1))
+        rec.update(
+            status="ok", chips=chips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            # analytic (scan-corrected) roofline numerators, per chip:
+            flops_per_chip=a_flops, hbm_bytes_per_chip=a_bytes,
+            # HLO cross-checks (scan bodies counted once — see analytic.py)
+            hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+            collective_bytes=coll_top,
+            collective_probe_bytes=coll_probe, stack_repeats=repeats,
+            collective_bytes_corrected=coll_total,
+            model_flops=mf,
+            useful_flops_ratio=(mf / (a_flops * chips)
+                                if a_flops else None),
+            compute_term_s=a_flops / PEAK_FLOPS_BF16,
+            memory_term_s=a_bytes / HBM_BW,
+            collective_term_s=coll_total / ICI_BW,
+            params=meta["cfg"].param_count(),
+            params_active=meta["cfg"].param_count(active_only=True),
+        )
+        terms = {"compute": rec["compute_term_s"],
+                 "memory": rec["memory_term_s"],
+                 "collective": rec["collective_term_s"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                try:
+                    rec[f"mem_{k}"] = int(getattr(mem, k))
+                except Exception:
+                    pass
+    except Exception as e:  # record the failure — these are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    _save(rec, save)
+    return rec
+
+
+def _save(rec, save):
+    if not save:
+        return
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+    if rec.get("tag"):
+        name += f"_{rec['tag']}"
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--fsdp", action="store_true", default=None)
+    ap.add_argument("--mesh-shape", default=None,
+                    help="comma ints, e.g. 4,4 (debug)")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--policy", default="baseline")
+    args = ap.parse_args()
+    mesh_shape = (tuple(int(x) for x in args.mesh_shape.split(","))
+                  if args.mesh_shape else None)
+
+    if args.all:
+        from repro.configs import list_archs
+        archs = [a for a in list_archs() if a != "paper-drl-trunk"]
+        cases = [(a, s) for a in archs for s in SHAPES]
+    else:
+        cases = [(args.arch, args.shape)]
+    for arch, shape in cases:
+        rec = dryrun_one(arch, shape, multi_pod=args.multi_pod,
+                         mesh_shape=mesh_shape,
+                         param_dtype=args.param_dtype, fsdp=args.fsdp,
+                         tag=args.tag, policy=args.policy)
+        keys = ("status", "compile_s", "hlo_flops", "compute_term_s",
+                "memory_term_s", "collective_term_s", "bottleneck",
+                "reason", "error")
+        print(json.dumps({"arch": arch, "shape": shape,
+                          **{k: rec[k] for k in keys if k in rec}}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Post-SPMD HLO analysis: per-device collective-traffic parsing."""
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device bytes moved by collectives, summed per op kind, parsed
+    from the post-SPMD HLO (result shapes)."""
+    out = {k: 0 for k in _COLL_OPS}
+    counts = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        head, _, rest = line.partition("=")
+        m = None
+        for op in _COLL_OPS:
+            if re.search(rf"\b{op}(-start|-done)?\(", rest):
+                m = op
+                break
+        if m is None or f"{m}-done(" in rest:
+            continue  # count start ops once
+        restype = rest.split(m)[0]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(restype):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[m] += nbytes
+        counts[m] += 1
+    out["total"] = sum(out[k] for k in _COLL_OPS)
+    out["counts"] = counts
+    return out
+
+
+
+# ring-algorithm bytes-on-wire factors per result byte (16-way groups):
+# all-reduce = 2(n-1)/n; all-gather/all-to-all = (n-1)/n;
+# reduce-scatter ~ (n-1) (result is 1/n of the reduced input); permute = 1
+WIRE_FACTORS = {"all-reduce": 1.875, "all-gather": 0.9375,
+                "reduce-scatter": 15.0, "all-to-all": 0.9375,
+                "collective-permute": 1.0}
+
+
+def wire_bytes(kinds: dict) -> float:
+    """Bytes-on-wire estimate from a per-kind result-bytes dict."""
+    return sum(kinds.get(k, 0) * f for k, f in WIRE_FACTORS.items())

@@ -1,0 +1,45 @@
+"""Production mesh builders (TPU v5e pods).
+
+Functions, not module-level constants, so importing this module never
+touches jax device state. Hardware constants for the roofline are here
+too (single source of truth).
+"""
+import jax
+
+# TPU v5e per-chip constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """16x16 = 256 chips/pod; multi_pod adds a 2-pod leading axis.
+    `shape` overrides for scaled-down debugging (same axis names)."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = (("pod", "data", "model") if len(shape) == 3
+            else ("data", "model"))
+    need = 1
+    for s in shape:
+        need *= s
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def make_worker_mesh(n_workers: int):
+    """1-D worker mesh for the DRL topology/sync experiments."""
+    return jax.make_mesh((n_workers,), ("workers",))
+
+
+def batch_axes(mesh):
+    """Mesh axes the global batch shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def n_chips(mesh):
+    return mesh.devices.size

@@ -1,0 +1,213 @@
+"""Sharding rules: param/cache/batch PartitionSpecs for the production
+mesh (megatron-style tensor parallel on `model`, data parallel on
+`pod`+`data`, optional ZeRO-3/FSDP over `data`).
+
+Rules are name-based with divisibility-checked fallbacks: if the
+preferred dim of a leaf doesn't divide by the axis size (e.g. smollm's
+15 heads on a 16-way model axis) the rule falls through to the next
+candidate dim and ultimately to replication — every decision is
+auditable via `explain_sharding`.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# (path regex, candidate dims to shard over `model`, in priority order)
+# dims are indices *from the right* of the leaf (robust to stacked
+# leading layer dims from scan-over-layers).
+_MODEL_RULES = (
+    (r"embed/tok$", (2,)),             # (V, d): vocab
+    (r"embed/unembed$", (1,)),         # (d, V): vocab
+    (r"projector$", (1,)),             # (fd, d)
+    (r"(mixer|xattn)/wq$", (2, 1)),    # (d, H, hd): heads, then hd
+    (r"(mixer|xattn)/wk$", (2, 1)),
+    (r"(mixer|xattn)/wv$", (2, 1)),
+    (r"(mixer|xattn)/wo$", (3, 2)),    # (H, hd, d): heads
+    (r"mixer/wuq$", (2, 1)),           # MLA (rq, H, hd)
+    (r"mixer/wqr$", (2,)),
+    (r"mixer/wuk$", (2,)),             # (rkv, H, hd)
+    (r"mixer/wuv$", (2,)),
+    (r"mixer/wdq$", (1,)),             # (d, rq)
+    (r"ffn/(wi|wg)$", (1,)),           # dense mlp (d, f) OR moe (E, d, f)
+    (r"ffn/wo$", (2,)),                # dense (f, d) OR moe (E, f, d)
+    (r"shared/(wi|wg)$", (1,)),        # (d, f*ns)
+    (r"shared/wo$", (2,)),             # (f*ns, d)
+    (r"mixer/(wr|wk|wv|wg)$", (1,)),   # rwkv (d, d): columns
+    (r"mixer/wo$", (2,)),              # rwkv (d, d): rows
+    (r"mixer/in_proj$", (1,)),         # mamba (d, 2di)
+    (r"mixer/out_proj$", (2,)),        # (di, d)
+    (r"mixer/(conv_w|conv_b|dt_bias|D)$", (1,)),  # (..., di)
+    (r"mixer/bc_proj$", (2,)),         # (di, 2N)
+    (r"mixer/dt_proj$", (2,)),         # (di, 1)
+    (r"mixer/A_log$", (2,)),           # (di, N)
+)
+
+_MOE_EXPERT_RULE = re.compile(r"ffn/(wi|wg|wo)$")
+_ATTN_RULE = re.compile(r"(mixer|xattn)/(wq|wk|wv|wo|wuq|wqr|wuk|wuv|"
+                        r"wdq)$")
+_EMBED_RULE = re.compile(r"embed/(tok|unembed)$")
+
+# Sharding policies (the §Perf hillclimb levers — "baseline" is the
+# paper-faithful naive always-shard-something scheme recorded in the
+# baseline roofline table):
+#   baseline        — rule table with full fallback chain
+#   attn_heads_only — attention leaves shard ONLY when the head dim
+#                     divides; otherwise replicate (avoids score-matrix
+#                     all-reduces when heads < model axis)
+#   +embed_d        — embedding/unembedding shard d_model instead of
+#                     vocab (decode: one logits psum instead of a full
+#                     table all-gather)
+#   pure_dp         — no tensor parallelism at all: params replicated,
+#                     batch sharded over EVERY mesh axis (the "small
+#                     models don't need TP" lever; collective cost
+#                     collapses to one grad all-reduce)
+POLICIES = ("baseline", "attn_heads_only", "attn_heads_only+embed_d",
+            "pure_dp")
+
+
+def _path_str(path):
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_pspec(path_str: str, shape, mesh, fsdp: bool = False,
+                policy: str = "baseline"):
+    """PartitionSpec for one param leaf."""
+    model = mesh.shape.get("model", 1)
+    data = mesh.shape.get("data", 1)
+    spec = [None] * len(shape)
+    if policy == "pure_dp":
+        if fsdp and data > 1:  # ZeRO storage sharding only
+            cands = sorted((s, i) for i, s in enumerate(shape)
+                           if s % data == 0 and s >= data)
+            if cands:
+                spec[cands[-1][1]] = "data"
+        return P(*spec)
+    # expert-parallel: MoE expert dim (rank-3 ffn leaves) over `model`
+    is_moe = (_MOE_EXPERT_RULE.search(path_str) and len(shape) >= 3
+              and shape[-3] >= 4)
+    if is_moe and shape[-3] % model == 0:
+        spec[len(shape) - 3] = "model"
+    else:
+        for rx, dims in _MODEL_RULES:
+            if re.search(rx, path_str):
+                if policy != "baseline" and _ATTN_RULE.search(path_str):
+                    dims = dims[:1]   # heads or nothing — no fallback
+                if "embed_d" in policy and _EMBED_RULE.search(path_str):
+                    # shard d_model instead of vocab
+                    dims = ((1,) if path_str.endswith("tok") else (2,))
+                for dfr in dims:  # dim index from the right
+                    i = len(shape) - dfr
+                    if 0 <= i < len(shape) and shape[i] % model == 0 \
+                            and shape[i] >= model:
+                        spec[i] = "model"
+                        break
+                break
+    if fsdp and data > 1:
+        # ZeRO-3: shard the largest remaining free dim over `data`
+        cands = sorted((s, i) for i, s in enumerate(shape)
+                       if spec[i] is None and s % data == 0 and s >= data)
+        if cands:
+            spec[cands[-1][1]] = "data"
+    return P(*spec)
+
+
+def shard_params(params_struct, mesh, fsdp: bool = False,
+                 policy: str = "baseline"):
+    """Pytree of NamedSharding matching a params (or opt-moment) tree."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0 or leaf.size < 1024:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, param_pspec(ps, leaf.shape, mesh, fsdp,
+                                               policy))
+    return jax.tree_util.tree_map_with_path(one, params_struct)
+
+
+def explain_sharding(params_struct, mesh, fsdp: bool = False, limit=None,
+                     policy: str = "baseline"):
+    rows = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            params_struct)[0][:limit]:
+        ps = _path_str(path)
+        spec = (P() if leaf.ndim == 0 or leaf.size < 1024
+                else param_pspec(ps, leaf.shape, mesh, fsdp, policy))
+        rows.append((ps, leaf.shape, spec))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def _bdims(mesh, policy="baseline"):
+    names = (("pod", "data", "model") if policy == "pure_dp"
+             else ("pod", "data"))
+    axes = tuple(a for a in names if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def batch_sharding(mesh, batch_struct, policy="baseline"):
+    """Shard every batch leaf on dim 0 (global batch)."""
+    bx = _bdims(mesh, policy)
+    n = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+    if policy == "pure_dp":
+        n *= mesh.shape.get("model", 1)
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % n == 0 and leaf.shape[0] >= n:
+            return NamedSharding(mesh, P(bx))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(one, batch_struct)
+
+
+def cache_sharding(mesh, cache_struct, batch: int):
+    """KV/recurrent-state cache shardings.
+
+    batch >= data axis: shard batch dim. batch == 1 (long_500k): shard
+    the *sequence/capacity* dim of kv-type leaves over `data` (distributed
+    flash-decode — XLA inserts the partial-softmax collectives), and the
+    head/channel dim of recurrent state over `model`.
+    """
+    n = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+    data = mesh.shape.get("data", 1)
+    model = mesh.shape.get("model", 1)
+    bx = _bdims(mesh)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        # leading stacked-layer dim from scan stacks shifts indices by 1
+        off = 1 if ".stack" in ps or ps.startswith("stack") else 0
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        bdim = off
+        if shape[bdim] % n == 0 and shape[bdim] >= n:
+            spec[bdim] = bx
+        else:
+            # batch too small: shard capacity (kv) over data
+            name = ps.rsplit("/", 1)[-1]
+            if name in ("k", "v", "ckv", "kr", "ek", "ev") \
+                    and len(shape) > bdim + 1 \
+                    and shape[bdim + 1] % data == 0 \
+                    and shape[bdim + 1] >= data:
+                spec[bdim + 1] = "data"
+            elif name in ("S",) and shape[bdim + 1] % model == 0:
+                spec[bdim + 1] = "model"   # rwkv state heads
+            elif name in ("conv", "ssm") and shape[-2 if name == "ssm"
+                                                   else -1] % model == 0:
+                spec[len(shape) - (2 if name == "ssm" else 1)] = "model"
+        # also shard kv heads/channels over model when possible
+        name = ps.rsplit("/", 1)[-1]
+        if name in ("k", "v", "ek", "ev") and len(shape) >= bdim + 3:
+            kvh_dim = bdim + 2
+            if spec[kvh_dim] is None and shape[kvh_dim] % model == 0 \
+                    and shape[kvh_dim] >= model:
+                spec[kvh_dim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)

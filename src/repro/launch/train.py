@@ -1,0 +1,90 @@
+"""End-to-end LM training driver (learner side of the survey's
+actor/learner split).
+
+CPU-scale example:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --reduced --steps 200 --batch 16 --seq 128
+Production dry-run path is launch/dryrun.py; this driver runs REAL steps
+on whatever devices exist (uses the mesh when >1 device).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.data import TokenStream
+from repro.models import build_model
+from repro.models.model import ModelOpts
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule
+
+
+def make_train_step(model, optimizer):
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state = optimizer.apply(params, opt_state, grads)
+        return params, opt_state, loss, metrics
+    return step
+
+
+def train(arch="smollm-360m", reduced=True, steps=200, batch=16, seq=128,
+          lr=3e-4, seed=0, ckpt=None, log_every=10, dtype="float32",
+          remat=False):
+    model = build_model(arch, ModelOpts(dtype=dtype, remat=remat),
+                        reduced=reduced)
+    cfg = model.cfg
+    stream = TokenStream(cfg.vocab, seq, batch, seed=seed)
+    optimizer = clip_by_global_norm(
+        adamw(cosine_schedule(lr, steps, warmup=steps // 20)), 1.0)
+    params = model.init(jax.random.PRNGKey(seed))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    opt_state = optimizer.init(params)
+    step_fn = make_train_step(model, optimizer)
+    history = []
+    t0 = time.time()
+    fe = None
+    if cfg.frontend == "vision_stub":
+        fe = 0.02 * jnp.ones((batch, cfg.frontend_tokens,
+                              cfg.frontend_dim or cfg.d_model))
+    elif cfg.frontend == "audio_stub":
+        fe = 0.02 * jnp.ones((batch, cfg.enc_tokens, cfg.d_model))
+    for i in range(steps):
+        b = stream.batch_at(i)
+        if fe is not None:
+            b = dict(b, frontend=fe)
+        params, opt_state, loss, metrics = step_fn(params, opt_state, b)
+        if i % log_every == 0 or i == steps - 1:
+            ce = float(metrics["ce"])
+            history.append({"step": i, "ce": round(ce, 4),
+                            "elapsed_s": round(time.time() - t0, 1)})
+            print(json.dumps(history[-1]))
+    if ckpt:
+        save_checkpoint(ckpt, {"params": params}, step=steps)
+    return {"arch": arch, "n_params": int(n_params),
+            "optimal_ce": round(stream.optimal_ce(), 4),
+            "history": history}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    out = train(args.arch, args.reduced, args.steps, args.batch, args.seq,
+                args.lr, ckpt=args.ckpt)
+    print(json.dumps({k: v for k, v in out.items() if k != "history"}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Shared primitive layers: norms, RoPE, SwiGLU MLP, embeddings, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, scale=None):
+    """Truncated-normal fan-in init, stored f32."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale)
+
+
+# -- norms ------------------------------------------------------------------
+
+def init_norm(cfg, key=None):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), jnp.float32),
+                "bias": jnp.zeros((cfg.d_model,), jnp.float32)}
+    return {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+
+
+def apply_norm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# -- rotary embeddings ------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                      # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP --------------------------------------------------------------------
+
+def init_mlp(cfg, key, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, (cfg.d_model, d_ff)),
+            "wg": dense_init(k2, (cfg.d_model, d_ff)),
+            "wo": dense_init(k3, (d_ff, cfg.d_model))}
+
+
+def apply_mlp(params, x):
+    """SwiGLU."""
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+    g = jnp.einsum("...d,df->...f", x, params["wg"].astype(x.dtype))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))
+
+
+def init_mlp_gelu(cfg, key, d_ff=None):
+    """2-matrix GELU MLP (whisper-style)."""
+    d_ff = d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, (cfg.d_model, d_ff)),
+            "wo": dense_init(k2, (d_ff, cfg.d_model))}
+
+
+def apply_mlp_gelu(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(h),
+                      params["wo"].astype(x.dtype))
+
+
+# -- embeddings -------------------------------------------------------------
+
+def init_embed(cfg, key):
+    # d^-0.5 keeps tied-unembedding logits O(1) (input side is rescaled
+    # by sqrt(d) for tied/gemma-style configs)
+    p = {"tok": dense_init(key, (cfg.vocab, cfg.d_model),
+                           scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(jax.random.fold_in(key, 1),
+                                  (cfg.d_model, cfg.vocab))
+    return p
+
+
+def embed_tokens(params, tokens, cfg, dtype):
+    x = jnp.take(params["tok"], tokens, axis=0).astype(dtype)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)  # gemma-style scaling
+    return x
+
+
+def unembed(params, x, cfg):
+    if cfg.tie_embeddings:
+        w = params["tok"].astype(x.dtype).T
+    else:
+        w = params["unembed"].astype(x.dtype)
+    return jnp.einsum("...d,dv->...v", x, w)

@@ -1,0 +1,113 @@
+"""Mamba selective-SSM block (Jamba's recurrent layer, arXiv:2403.19887).
+
+x-dependent (B, C, dt); diagonal A (di, N):
+    h_t = exp(dt_t ⊗ A) ⊙ h_{t-1} + (dt_t x_t) ⊗ B_t
+    y_t = (h_t · C_t) + D ⊙ x_t
+Sequence path: lax.scan over chunks; within a chunk the linear recurrence
+runs through lax.associative_scan (exact, parallel — the TPU-native
+counterpart of the GPU selective-scan kernel). Decode is the one-step
+recurrence with conv + ssm state carried in the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_mamba(cfg, key):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di), scale=0.5),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "bc_proj": dense_init(ks[2], (di, 2 * N)),
+        "dt_proj": dense_init(ks[3], (di, 1)),
+        "dt_bias": jnp.full((di,), -4.0, jnp.float32),
+        "A_log": jnp.log(1.0 + jnp.arange(1, N + 1, dtype=jnp.float32)
+                         )[None, :] * jnp.ones((di, 1), jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d)),
+    }
+
+
+def _causal_conv(p, x, conv_state):
+    """Depthwise causal conv via K shifted adds. x: (B,T,di);
+    conv_state: (B,K-1,di) trailing inputs from the previous segment."""
+    K = p["conv_w"].shape[0]
+    dt = x.dtype
+    xx = jnp.concatenate([conv_state.astype(dt), x], axis=1)
+    out = sum(xx[:, K - 1 - i: xx.shape[1] - i] * p["conv_w"][K - 1 - i]
+              .astype(dt) for i in range(K))
+    new_state = xx[:, -(K - 1):]
+    return out + p["conv_b"].astype(dt), new_state
+
+
+def ssm_scan_chunked(u, dt_, B_, C_, A, state, chunk=32):
+    """u, dt_: (B,T,di); B_, C_: (B,T,N); A: (di,N) (negative);
+    state: (B,di,N). Returns (y (B,T,di), final state)."""
+    Bb, T, di = u.shape
+    N = A.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        z3 = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        u, dt_, B_, C_ = z3(u), z3(dt_), z3(B_), z3(C_)
+    Tp = u.shape[1]
+    nc = Tp // chunk
+    r = lambda a: a.reshape(Bb, nc, chunk, a.shape[-1]).transpose(
+        1, 0, 2, 3)
+    uc, dtc, Bc, Cc = r(u), r(dt_), r(B_), r(C_)
+
+    def body(h0, blk):
+        ub, dtb, Bb_, Cb = blk                     # (B,L,·)
+        a = jnp.exp(dtb[..., None] * A)            # (B,L,di,N)
+        b = (dtb * ub)[..., None] * Bb_[:, :, None]  # (B,L,di,N)
+
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, b1 * a2 + b2
+
+        acc_a, acc_b = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = acc_a * h0[:, None] + acc_b            # (B,L,di,N)
+        y = jnp.einsum("bldn,bln->bld", h, Cb)
+        return h[:, -1], y
+
+    state, ys = jax.lax.scan(body, state, (uc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(Bb, Tp, di)[:, :T]
+    return y, state
+
+
+def mamba_seq(cfg, p, x, state, chunk=32):
+    """x: (B,T,d); state: {'conv': (B,K-1,di), 'ssm': (B,di,N)}."""
+    dt = x.dtype
+    di = cfg.ssm_expand * cfg.d_model
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(dt))
+    u, z = xz[..., :di], xz[..., di:]
+    u, conv_state = _causal_conv(p, u, state["conv"])
+    u = jax.nn.silu(u)
+    bc = jnp.einsum("bte,en->btn", u, p["bc_proj"].astype(dt))
+    N = cfg.ssm_state
+    B_, C_ = bc[..., :N].astype(jnp.float32), bc[..., N:].astype(jnp.float32)
+    dt_ = jax.nn.softplus(
+        jnp.einsum("bte,eo->bto", u, p["dt_proj"].astype(dt))
+        .astype(jnp.float32) + p["dt_bias"])       # (B,T,1) -> broadcast di
+    dt_ = jnp.broadcast_to(dt_, u.shape).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = ssm_scan_chunked(u.astype(jnp.float32), dt_, B_, C_, A,
+                                    state["ssm"].astype(jnp.float32),
+                                    chunk=chunk)
+    y = y + p["D"] * u.astype(jnp.float32)
+    y = y.astype(dt) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(dt))
+    return out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba_decode(cfg, p, x, state):
+    """One-step decode; x: (B,1,d)."""
+    y, new_state = mamba_seq(cfg, p, x, state, chunk=1)
+    return y, new_state

@@ -1,0 +1,145 @@
+"""Mixture-of-experts FFN: top-k router + sort-based grouped matmul.
+
+TPU-native dispatch (megablocks adapted to XLA/Pallas): flatten tokens,
+sort the (token, expert) assignments by expert, pack into a capacity-
+padded (E, C, d) buffer, run a grouped matmul (Pallas `gmm` kernel on
+TPU, einsum fallback elsewhere), then unsort and combine with router
+weights. Expert axis shards over the `model` mesh axis (expert
+parallelism — XLA inserts the all-to-all).
+
+Survey tie-in (§5.4 load balancing): the router emits the standard
+load-balance auxiliary loss; benchmarks/fig6 uses the router stats.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_moe(cfg, key):
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    d, f = cfg.d_model, m.d_ff
+    p = {
+        "router": dense_init(ks[0], (d, m.n_experts)),
+        "wi": dense_init(ks[1], (m.n_experts, d, f)),
+        "wg": dense_init(ks[2], (m.n_experts, d, f)),
+        "wo": dense_init(ks[3], (m.n_experts, f, d)),
+    }
+    if m.n_shared:
+        kb = jax.random.split(jax.random.fold_in(key, 7), 3)
+        p["shared"] = {
+            "wi": dense_init(kb[0], (d, f * m.n_shared)),
+            "wg": dense_init(kb[1], (d, f * m.n_shared)),
+            "wo": dense_init(kb[2], (f * m.n_shared, d)),
+        }
+    return p
+
+
+def _gmm(x, w, use_kernels):
+    """Grouped matmul: (E,C,d) @ (E,d,f) -> (E,C,f)."""
+    if use_kernels:
+        from repro.kernels.gmm import ops as gmm_ops
+        return gmm_ops.gmm(x, w)
+    return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+
+
+def apply_moe(cfg, p, x, use_kernels=False, local_dispatch=False):
+    """x: (B,S,d) -> (out (B,S,d), aux_loss scalar).
+
+    local_dispatch=True (§Perf beyond-paper optimization): dispatch is
+    vmapped over the batch dim, so the sort/scatter stays *local to each
+    data shard* — the only cross-device traffic left is the canonical
+    expert-parallel all-to-all on the (E, C, d) buffers. The global path
+    sorts over all tokens (better capacity utilisation, but the sort is
+    distributed when the batch is sharded — expensive collectives)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    dt = x.dtype
+    if local_dispatch:
+        outs, auxs = jax.vmap(
+            lambda xr: _dispatch_tokens(cfg, p, xr, False))(x)
+        out = outs.reshape(B, S, d)
+        aux = auxs.mean()
+    else:
+        out, aux = _dispatch_tokens(cfg, p, x.reshape(B * S, d),
+                                    use_kernels)
+        out = out.reshape(B, S, d)
+    if m.n_shared:
+        sp = p["shared"]
+        hs = jnp.einsum("bsd,df->bsf", x, sp["wi"].astype(dt))
+        gs = jnp.einsum("bsd,df->bsf", x, sp["wg"].astype(dt))
+        out = out + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gs) * hs,
+                               sp["wo"].astype(dt))
+    return out, aux
+
+
+def _dispatch_tokens(cfg, p, xt, use_kernels):
+    """Routed-expert compute for a flat (T, d) token block."""
+    m = cfg.moe
+    T, d = xt.shape
+    E, K = m.n_experts, m.top_k
+    dt = xt.dtype
+
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(dt))
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(gates, K)                       # (T,K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), axis=0)
+    density_proxy = jnp.mean(gates, axis=0)
+    aux = jnp.sum(density * density_proxy) * E * m.aux_loss_coef
+
+    # ---- sort-by-expert dispatch with capacity ----
+    C = int(max(8, round(T * K / E * m.capacity_factor)))
+    fe = topi.reshape(-1)                                      # (T*K,)
+    order = jnp.argsort(fe)                                    # stable
+    se = fe[order]
+    tok_of = order // K
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(T * K) - first                            # rank in group
+    keep = pos < C
+    dest = jnp.where(keep, se * C + pos, E * C)                # E*C = drop slot
+    buf = jnp.zeros((E * C + 1, d), dt).at[dest].set(xt[tok_of])
+    eb = buf[: E * C].reshape(E, C, d)
+
+    h = _gmm(eb, p["wi"], use_kernels)
+    g = _gmm(eb, p["wg"], use_kernels)
+    o = _gmm(jax.nn.silu(g) * h, p["wo"], use_kernels)         # (E,C,d)
+
+    o_flat = o.reshape(E * C, d)
+    gathered = jnp.where(keep[:, None],
+                         o_flat[jnp.minimum(dest, E * C - 1)], 0.0)
+    w_sorted = topv.reshape(-1)[order][:, None].astype(dt)
+    out = jnp.zeros((T, d), dt).at[tok_of].add(gathered * w_sorted)
+    return out, aux
+
+
+def apply_moe_dense_oracle(cfg, p, x):
+    """O(T*E) dense-dispatch oracle — math-identical to apply_moe when no
+    token is dropped. Used by tests only."""
+    m = cfg.moe
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    dt = x.dtype
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(dt))
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(gates, m.top_k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    comb = jnp.zeros((xt.shape[0], m.n_experts), jnp.float32)
+    comb = jax.vmap(lambda c, i, v: c.at[i].add(v))(comb, topi, topv)
+    h = jnp.einsum("td,edf->tef", xt, p["wi"].astype(dt))
+    g = jnp.einsum("td,edf->tef", xt, p["wg"].astype(dt))
+    o = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * h, p["wo"].astype(dt))
+    out = jnp.einsum("ted,te->td", o.astype(jnp.float32), comb).astype(dt)
+    if m.n_shared:
+        sp = p["shared"]
+        hs = jnp.einsum("td,df->tf", xt, sp["wi"].astype(dt))
+        gs = jnp.einsum("td,df->tf", xt, sp["wg"].astype(dt))
+        out = out + jnp.einsum("tf,fd->td", jax.nn.silu(gs) * hs,
+                               sp["wo"].astype(dt))
+    return out.reshape(B, S, d)

@@ -1,0 +1,165 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): data-dependent decay WKV.
+
+Time-mix: token-shift with data-dependent lerp (low-rank), per-head
+matrix-valued state S ∈ R^{N×N}:
+    y_t = r_t · (S_{t-1} + u ⊙ k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ          (w_t data-dependent)
+Channel-mix: token-shift + squared-relu 2-matrix FFN.
+
+Sequence path is *chunked*: within a chunk the decay products are formed
+as pairwise exp(cum_t − cum_j) with t ≥ j (differences of logs ≤ 0, so no
+overflow), the inter-chunk state is carried by lax.scan — the same
+blocking the Pallas wkv6 kernel uses on TPU. Validated against the
+per-step scan oracle in kernels/wkv6/ref.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+LORA_RANK = 64
+
+
+def init_rwkv(cfg, key):
+    d, H, N = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        # data-dependent token-shift lerp (5 mixes: r,k,v,w,g)
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "mix_a": dense_init(ks[0], (d, 5 * 32)),
+        "mix_b": dense_init(ks[1], (5, 32, d), scale=0.1),
+        "wr": dense_init(ks[2], (d, d)),
+        "wk": dense_init(ks[3], (d, d)),
+        "wv": dense_init(ks[4], (d, d)),
+        "wg": dense_init(ks[5], (d, d)),
+        "wo": dense_init(ks[6], (d, d)),
+        # decay: w = exp(-exp(w0 + lora(x)))
+        "w0": -6.0 + jnp.zeros((d,), jnp.float32),
+        "wa": dense_init(ks[7], (d, LORA_RANK)),
+        "wb": dense_init(ks[8], (LORA_RANK, d), scale=0.1),
+        "u": jnp.zeros((H, N), jnp.float32),  # first-token bonus
+        "ln_scale": jnp.ones((H, N), jnp.float32),  # per-head groupnorm
+        # channel mix
+        "cm_mu": 0.5 * jnp.ones((2, d), jnp.float32),
+        "cm_k": dense_init(ks[9], (d, cfg.d_ff)),
+        "cm_v": dense_init(ks[10], (cfg.d_ff, d)),
+        "cm_r": dense_init(ks[11], (d, d)),
+    }
+    return p
+
+
+def _token_shift(x, last):
+    """x: (B,T,d); last: (B,d) previous token (state). Returns shifted x
+    and the new last-token state."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def _ddlerp(p, x, prev):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    dt = x.dtype
+    base = x + (prev - x) * p["mu"][0].astype(dt)  # use mu_r as the probe
+    lo = jnp.einsum("btd,dr->btr", jnp.tanh(base), p["mix_a"].astype(dt))
+    lo = lo.reshape(*lo.shape[:-1], 5, 32)
+    delta = jnp.einsum("btfr,frd->btfd", lo, p["mix_b"].astype(dt))
+    mix = p["mu"].astype(dt) + delta               # (B,T,5,d)
+    xs = x[:, :, None] + (prev - x)[:, :, None] * mix
+    return [xs[:, :, i] for i in range(5)]
+
+
+def _rkvwg(cfg, p, x, prev):
+    dt = x.dtype
+    xr, xk, xv, xw, xg = _ddlerp(p, x, prev)
+    B, T, d = x.shape
+    H, N = cfg.n_heads, cfg.head_dim
+    r = jnp.einsum("btd,de->bte", xr, p["wr"].astype(dt)).reshape(B, T, H, N)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"].astype(dt)).reshape(B, T, H, N)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"].astype(dt)).reshape(B, T, H, N)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"].astype(dt)))
+    logw = -jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + jnp.einsum("btd,dr->btr", jnp.tanh(xw).astype(jnp.float32),
+                     p["wa"].astype(jnp.float32))
+        @ p["wb"].astype(jnp.float32))             # (B,T,d) <= 0
+    logw = logw.reshape(B, T, H, N)
+    return r, k, v, g, logw
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk=64):
+    """Chunked WKV. r,k,v,logw: (B,T,H,N) f32; u: (H,N); state: (B,H,N,N).
+    Returns (y (B,T,H,N), final state)."""
+    B, T, H, N = r.shape
+    pad = (-T) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nc = Tp // chunk
+    rc = r.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+    wc = logw.reshape(B, nc, chunk, H, N).transpose(1, 0, 2, 3, 4)
+
+    def body(S, blk):
+        rb, kb, vb, lw = blk                       # (B,L,H,N)
+        c = jnp.cumsum(lw, axis=1)                 # inclusive cumsum
+        cprev = c - lw                             # c_{t-1}
+        # intra-chunk: score[t,j] = sum_i r_t k_j exp(c_{t-1}-c_j), j<t
+        dmat = cprev[:, :, None] - c[:, None]      # (B,t,j,H,N)
+        tri = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None])
+        dmat = jnp.where(tri[None, :, :, None, None], dmat, -jnp.inf)
+        score = jnp.einsum("bthn,bjhn,btjhn->btjh", rb, kb,
+                           jnp.exp(dmat))
+        # diagonal u-bonus term
+        sdiag = jnp.einsum("bthn,hn,bthn->bth", rb, u, kb)
+        y = jnp.einsum("btjh,bjhn->bthn", score, vb) \
+            + sdiag[..., None] * vb
+        # inter-chunk: y_t += (r_t * exp(c_{t-1})) @ S
+        y = y + jnp.einsum("bthn,bhnm->bthm", rb * jnp.exp(cprev), S)
+        # state update: S' = exp(c_L) S + sum_j exp(c_L - c_j) k_j v_j^T
+        cl = c[:, -1]                              # (B,H,N)
+        S_new = jnp.exp(cl)[..., None] * S + jnp.einsum(
+            "bjhn,bjhm->bhnm", kb * jnp.exp(cl[:, None] - c), vb)
+        return S_new, y
+
+    state, ys = jax.lax.scan(body, state, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Tp, H, N)[:, :T]
+    return y, state
+
+
+def _headnorm(p, y, eps=1e-5):
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + eps) * p["ln_scale"]
+
+
+def rwkv_time_mix_seq(cfg, p, x, state, chunk=64):
+    """x: (B,T,d); state: {'S': (B,H,N,N), 'shift': (B,d)}."""
+    B, T, d = x.shape
+    H, N = cfg.n_heads, cfg.head_dim
+    prev, new_shift = _token_shift(x, state["shift"])
+    r, k, v, g, logw = _rkvwg(cfg, p, x, prev)
+    y, S = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                       v.astype(jnp.float32), logw,
+                       p["u"].astype(jnp.float32),
+                       state["S"].astype(jnp.float32), chunk=chunk)
+    y = _headnorm(p, y).reshape(B, T, d).astype(x.dtype) * \
+        g.reshape(B, T, d)
+    out = jnp.einsum("btd,de->bte", y, p["wo"].astype(x.dtype))
+    return out, {"S": S, "shift": new_shift}
+
+
+def rwkv_channel_mix(cfg, p, x, shift_state):
+    dt = x.dtype
+    prev, new_shift = _token_shift(x, shift_state)
+    xk = x + (prev - x) * p["cm_mu"][0].astype(dt)
+    xr = x + (prev - x) * p["cm_mu"][1].astype(dt)
+    kk = jnp.square(jax.nn.relu(
+        jnp.einsum("btd,df->btf", xk, p["cm_k"].astype(dt))))
+    vv = jnp.einsum("btf,fd->btd", kk, p["cm_v"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr,
+                                   p["cm_r"].astype(dt)))
+    return rr * vv, new_shift

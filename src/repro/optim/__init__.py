@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, sgd, lion, clip_by_global_norm, chain,
+    cosine_schedule, global_norm)

@@ -1,0 +1,137 @@
+"""Optimizers built from scratch in JAX (no optax): AdamW, SGD(+momentum),
+Lion, global-norm clipping, cosine LR schedule. optax-like
+(init/update) interface; all states are pytrees of arrays so they shard
+with the params (relevant for the ZeRO-style FSDP option)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+    def apply(self, params, state, grads):
+        updates, state = self.update(grads, state, params)
+        params = jax.tree_util.tree_map(lambda p, u: p + u, params,
+                                        updates)
+        return params, state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak, total_steps, warmup=0, floor=0.0):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                     0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def sgd(lr, momentum: float = 0.0):
+    def init(params):
+        mu = (jax.tree_util.tree_map(jnp.zeros_like, params)
+              if momentum else None)
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mu"], grads)
+            upd = jax.tree_util.tree_map(lambda m: -lr_t * m, mu)
+            return upd, {"step": step, "mu": mu}
+        upd = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return upd, {"step": step, "mu": None}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+          moment_dtype=jnp.float32):
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: (b1 * m_ + (1 - b1) * g.astype(moment_dtype)),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: (b2 * v_
+                           + (1 - b2) * jnp.square(g.astype(moment_dtype))),
+            state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            mhat = m_.astype(jnp.float32) / bc1
+            vhat = v_.astype(jnp.float32) / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def lion(lr, b1=0.9, b2=0.99, weight_decay=0.0):
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+
+        def upd(m_, g, p):
+            u = jnp.sign(b1 * m_ + (1 - b1) * g)
+            if weight_decay:
+                u = u + weight_decay * p
+            return -lr_t * u
+
+        updates = jax.tree_util.tree_map(upd, state["m"], grads, params)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b2 * m_ + (1 - b2) * g, state["m"], grads)
+        return updates, {"step": step, "m": m}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params):
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update)
+
+
+def chain(opt: Optimizer, *wrappers) -> Optimizer:
+    for w in wrappers:
+        opt = w(opt)
+    return opt

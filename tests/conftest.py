@@ -1,0 +1,16 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# ONE device; multi-device tests spawn subprocesses with their own flags.
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

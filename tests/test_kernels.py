@@ -1,0 +1,132 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
+pure-jnp oracle in each kernel's ref.py (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_hsd
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.gmm.ops import gmm
+from repro.kernels.gmm.ref import gmm_ref
+from repro.kernels.vtrace.ops import vtrace as vtrace_k
+from repro.kernels.vtrace.ref import vtrace_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+# ---------------------------------------------------------------- flash
+@pytest.mark.parametrize("B,H,KVH,S,D,causal,window", [
+    (2, 4, 2, 256, 64, True, 0),
+    (1, 4, 1, 256, 64, True, 64),      # sliding window, GQA kv=1
+    (2, 2, 2, 128, 32, False, 0),      # non-causal (encoder)
+    (1, 8, 4, 384, 128, True, 128),    # non-multiple S (padding path)
+    (1, 2, 1, 512, 256, True, 0),      # gemma-style head_dim=256
+])
+def test_flash_attention_sweep(B, H, KVH, S, D, causal, window, rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KVH, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KVH, S, D), jnp.float32)
+    o = flash_attention_hsd(q, k, v, causal=causal, window=window)
+    r = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(o, r, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_attention_dtypes(dtype, rng):
+    dt = jnp.dtype(dtype)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64)).astype(dt)
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)).astype(dt)
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)).astype(dt)
+    o = flash_attention_hsd(q, k, v, causal=True)
+    r = attention_ref(q, k, v, causal=True)
+    atol = 3e-2 if dtype == "bfloat16" else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=atol)
+
+
+def test_flash_wrapper_layout(rng):
+    """(B,S,KVH,G,D) wrapper layout matches the model-side jnp path."""
+    from repro.models.attention import causal_attention
+    B, S, KVH, G, D = 1, 200, 2, 2, 32
+    ks = jax.random.split(rng, 3)
+    qg = jax.random.normal(ks[0], (B, S, KVH, G, D))
+    k = jax.random.normal(ks[1], (B, S, KVH, D))
+    v = jax.random.normal(ks[2], (B, S, KVH, D))
+    o1 = flash_attention(qg, k, v, causal=True, bq=128, bk=128)
+    o2 = causal_attention(qg, k, v, jnp.int32(0), n_q_chunks=4,
+                          block_k=64)
+    np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+
+# ---------------------------------------------------------------- wkv6
+@pytest.mark.parametrize("B,T,H,N,chunk", [
+    (2, 100, 3, 16, 32),
+    (1, 64, 2, 64, 64),
+    (1, 37, 1, 8, 16),                 # padding path
+])
+def test_wkv6_sweep(B, T, H, N, chunk, rng):
+    ks = jax.random.split(rng, 4)
+    r = jax.random.normal(ks[0], (B, T, H, N))
+    k = jax.random.normal(ks[1], (B, T, H, N))
+    v = jax.random.normal(ks[2], (B, T, H, N))
+    logw = -jnp.exp(0.5 * jax.random.normal(ks[3], (B, T, H, N)))
+    u = 0.3 * jnp.ones((H, N))
+    y_ref, _ = wkv6_ref(r, k, v, logw, u)
+    y_k = wkv6(r, k, v, logw, u, chunk=chunk)
+    np.testing.assert_allclose(y_k, y_ref, atol=2e-4, rtol=1e-3)
+
+
+def test_wkv6_model_chunked_matches_ref(rng):
+    from repro.models.rwkv6 import wkv_chunked
+    B, T, H, N = 2, 50, 2, 16
+    ks = jax.random.split(rng, 4)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, N)) for i in range(3))
+    logw = -jnp.exp(0.5 * jax.random.normal(ks[3], (B, T, H, N)))
+    u = 0.1 * jnp.ones((H, N))
+    state0 = 0.2 * jax.random.normal(rng, (B, H, N, N))
+    y_ref, s_ref = wkv6_ref(r, k, v, logw, u, state0)
+    y_c, s_c = wkv_chunked(r, k, v, logw, u, state0, chunk=16)
+    np.testing.assert_allclose(y_c, y_ref, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(s_c, s_ref, atol=2e-4, rtol=1e-3)
+
+
+# ----------------------------------------------------------------- gmm
+@pytest.mark.parametrize("E,C,d,f", [
+    (4, 70, 96, 130),                  # padding on every axis
+    (2, 128, 128, 128),                # exact tiles
+    (8, 16, 512, 64),
+])
+def test_gmm_sweep(E, C, d, f, rng):
+    x = jax.random.normal(rng, (E, C, d))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (E, d, f))
+    np.testing.assert_allclose(gmm(x, w), gmm_ref(x, w),
+                               atol=3e-4, rtol=1e-4)
+
+
+def test_gmm_bf16(rng):
+    x = jax.random.normal(rng, (2, 64, 64)).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (2, 64, 64))
+    o = gmm(x, w)
+    assert o.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(gmm_ref(x, w), np.float32),
+                               atol=0.2, rtol=0.05)
+
+
+# --------------------------------------------------------------- vtrace
+@pytest.mark.parametrize("T,B", [(37, 9), (64, 128), (128, 1)])
+def test_vtrace_kernel_sweep(T, B, rng):
+    ks = jax.random.split(rng, 4)
+    lr = 0.3 * jax.random.normal(ks[0], (T, B))
+    disc = 0.99 * (jax.random.uniform(ks[1], (T, B)) > 0.05)
+    rew = jax.random.normal(ks[2], (T, B))
+    val = jax.random.normal(ks[3], (T, B))
+    boot = jax.random.normal(ks[0], (B,))
+    vs1, a1 = vtrace_ref(lr, disc, rew, val, boot)
+    vs2, a2 = vtrace_k(lr, disc, rew, val, boot)
+    np.testing.assert_allclose(vs1, vs2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(a1, a2, atol=1e-5, rtol=1e-5)
