@@ -1,6 +1,8 @@
 """Survey Fig. 3 / §3: centralized (PS) vs decentralized (all-reduce) vs
-gossip — HLO collective bytes per step + convergence, on an 8-worker
-mesh (spawned in a subprocess so this process keeps one device)."""
+gossip — now driven through the unified Trainer: an 8-worker IMPALA/
+CartPole superstep is lowered per topology and its HLO collective bytes
+compared, then trained to check all three converge. Spawned in a
+subprocess so this process keeps one device."""
 import json
 import os
 import subprocess
@@ -14,33 +16,24 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import jax, jax.numpy as jnp, numpy as np, json
-    from jax.sharding import Mesh
-    from repro.core.topology import make_distributed_step, replicate_for
+    import json
+    from repro.core.trainer import Trainer, TrainerConfig
     from repro.launch.hlo_analysis import collective_bytes
-    from repro.optim import sgd
-    mesh = Mesh(np.array(jax.devices()).reshape(8,), ("workers",))
-    D = 4096  # param dim: makes collective sizes visible
-    def loss(p, b):
-        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
-    key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (8, 32, D))
-    wt = jax.random.normal(jax.random.fold_in(key, 1), (D,)) / D ** 0.5
-    y = jnp.einsum("wbd,d->wb", x, wt)
-    p0 = {"w": jnp.zeros((D,))}
-    opt = sgd(2e-4)  # lr ~ 1/D for the quadratic to contract
+    from repro.envs import CartPole
+    env = CartPole()
     out = {}
     for topo in ("allreduce", "ps", "gossip"):
-        params = replicate_for(mesh, "workers", p0)
-        ostate = replicate_for(mesh, "workers", opt.init(p0))
-        step = make_distributed_step(loss, opt, topo, mesh)
-        lowered = step.lower(params, ostate, {"x": x, "y": y})
-        coll = collective_bytes(lowered.compile().as_text())
-        for i in range(20):
-            params, ostate, l = step(params, ostate, {"x": x, "y": y})
+        cfg = TrainerConfig(algo="impala", iters=30, superstep=10,
+                            n_envs=32, unroll=16, n_workers=8,
+                            topology=topo, log_every=10,
+                            algo_kwargs={"hidden": (64, 64)})
+        tr = Trainer(env, cfg)
+        coll = collective_bytes(tr.lower().compile().as_text())
+        _, hist = tr.fit()
         out[topo] = {"collective_bytes": coll["total"],
                      "counts": coll["counts"],
-                     "final_loss": float(l)}
+                     "final_loss": hist[-1]["loss"],
+                     "final_return": hist[-1]["episode_return"]}
     print("RESULT " + json.dumps(out))
 """)
 
@@ -58,6 +51,8 @@ def run():
     rows = []
     for topo, d in res.items():
         rows.append((f"fig3/{topo}", None,
-                     f"collective_bytes_per_step={d['collective_bytes']};"
-                     f"final_loss={d['final_loss']:.5f}"))
+                     f"collective_bytes_per_superstep="
+                     f"{d['collective_bytes']};"
+                     f"final_loss={d['final_loss']:.4f};"
+                     f"final_return={d['final_return']:.1f}"))
     return emit(rows)

@@ -1,32 +1,34 @@
 """Survey Fig. 6 + §6.2: synchronization mechanisms — convergence under
-staleness (BSP/SSP/ASP) and the barrier-cost throughput model."""
+staleness (BSP/SSP/ASP) and the barrier-cost throughput model.
+
+Now driven end-to-end through the unified Trainer: each mechanism is a
+policy-lag schedule into the actor ring of an *uncorrected* actor-critic
+(A3C) on CartPole — the survey's qualitative claim is that staleness
+degrades convergence (BSP >= SSP >= ASP) while the analytic cost model
+orders wall-time the other way (ASP <= SSP <= BSP)."""
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core.sync import (SyncConfig, make_delays,
-                             train_with_staleness, sync_cost_model)
-from repro.optim import sgd
+from repro.core.sync import SyncConfig, sync_cost_model
+from repro.core.trainer import Trainer, TrainerConfig
+from repro.envs import CartPole
 
 
 def run():
-    key = jax.random.PRNGKey(0)
-    T, W = 80, 8
-    x = jax.random.normal(key, (T, W, 32, 8))
-    w_true = jnp.linspace(-1, 1, 8)
-    y = jnp.einsum("twbd,d->twb", x, w_true)
-    loss = lambda p, b: jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
-    p0 = {"w": jnp.zeros((8,))}
+    env = CartPole()
     rows = []
     for mech in ("bsp", "ssp", "asp"):
-        cfg = SyncConfig(mech, W, max_delay=8, staleness_bound=2)
-        d = make_delays(cfg, T, jax.random.PRNGKey(3))
-        _, losses = train_with_staleness(loss, p0, sgd(0.3),
-                                         {"x": x, "y": y}, d)
-        wall = float(sync_cost_model(cfg, 1.0, 0.3, T,
+        cfg = TrainerConfig(algo="a3c", iters=60, superstep=10,
+                            n_envs=16, unroll=16, sync=mech,
+                            max_delay=8, staleness_bound=2,
+                            seed=0, log_every=60)
+        _, hist = Trainer(env, cfg).fit()
+        scfg = SyncConfig(mech, 8, max_delay=8, staleness_bound=2)
+        wall = float(sync_cost_model(scfg, 1.0, 0.3, 60,
                                      jax.random.PRNGKey(4)))
         rows.append((f"fig6/{mech}", None,
-                     f"final_loss={float(losses[-5:].mean()):.5f};"
+                     f"final_return={hist[-1]['episode_return']:.1f};"
+                     f"final_loss={hist[-1]['loss']:.4f};"
                      f"model_wall_s={wall:.1f};"
-                     f"mean_staleness={float(d.mean()):.2f}"))
+                     f"ring_size={cfg.ring_size}"))
     return emit(rows)

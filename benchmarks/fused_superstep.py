@@ -1,0 +1,38 @@
+"""Fused-superstep dispatch benchmark (unified Trainer tentpole):
+K jitted iterations per host round-trip vs per-iteration dispatch.
+
+The legacy drivers blocked on `float(loss)` every iteration; the Trainer
+scans K iterations inside one program and reads metrics back once per
+superstep. Both paths are numerically identical (tests/test_trainer.py),
+so the delta is pure dispatch + host-sync overhead. Timed on the second
+`fit` call — compilation is cached in the Trainer — so the comparison is
+steady-state."""
+import time
+
+from benchmarks.common import emit
+from repro.core.trainer import Trainer, TrainerConfig
+from repro.envs import CartPole
+
+
+def _timed_fit(trainer, fused):
+    trainer.fit(fused=fused)            # warm the jit cache
+    t0 = time.perf_counter()
+    trainer.fit(fused=fused)
+    return time.perf_counter() - t0
+
+
+def run():
+    env = CartPole()
+    cfg = TrainerConfig(algo="impala", iters=96, superstep=16, n_envs=16,
+                        unroll=16, log_every=96)
+    trainer = Trainer(env, cfg)
+    fused_s = _timed_fit(trainer, fused=True)
+    unfused_s = _timed_fit(trainer, fused=False)
+    return emit([
+        ("superstep/fused", fused_s / cfg.iters * 1e6,
+         f"wall_s={fused_s:.3f};iters={cfg.iters};K={cfg.superstep}"),
+        ("superstep/unfused", unfused_s / cfg.iters * 1e6,
+         f"wall_s={unfused_s:.3f};iters={cfg.iters};K=1"),
+        ("superstep/speedup", None,
+         f"fused_vs_unfused={unfused_s / fused_s:.2f}x"),
+    ])

@@ -5,12 +5,13 @@ import sys
 
 def main() -> None:
     from benchmarks import (table1_computing, fig3_topologies,
-                            fig5_simulation, fig6_sync, sec7_evolution,
-                            table2_features, roofline)
+                            fig5_simulation, fig6_sync, fused_superstep,
+                            sec7_evolution, table2_features, roofline)
     mods = [("table1_computing", table1_computing),
             ("fig3_topologies", fig3_topologies),
             ("fig5_simulation", fig5_simulation),
             ("fig6_sync", fig6_sync),
+            ("fused_superstep", fused_superstep),
             ("sec7_evolution", sec7_evolution),
             ("table2_features", table2_features),
             ("roofline", roofline)]

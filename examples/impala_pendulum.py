@@ -1,24 +1,24 @@
-"""IMPALA on continuous control with explicit policy-lag — reproduces the
-survey's §6.1 claim: V-trace correction recovers performance lost to
-actor/learner policy lag.
+"""IMPALA with explicit policy-lag through the unified Trainer —
+reproduces the survey's §6.1 claim: V-trace correction recovers
+performance lost to actor/learner policy lag.
 
   PYTHONPATH=src python examples/impala_pendulum.py
 """
+from repro.core.trainer import Trainer, TrainerConfig
 from repro.envs import CartPole
-from repro.core.networks import MLPPolicy
-from repro.launch.rl_train import run_impala
 
 
 def main():
     env = CartPole()
     for lag in (0, 4):
         for vtrace in (True, False):
-            pol = MLPPolicy(env.obs_dim, env.n_actions)
-            _, hist = run_impala(env, pol, iters=60, n_envs=32,
-                                 unroll=32, policy_lag=lag,
-                                 use_vtrace=vtrace, seed=0, log_every=60)
+            cfg = TrainerConfig(
+                algo="impala", iters=60, superstep=10, n_envs=32,
+                unroll=32, policy_lag=lag, seed=0, log_every=60,
+                algo_kwargs={"use_vtrace": vtrace})
+            _, hist = Trainer(env, cfg).fit()
             print(f"lag={lag} vtrace={vtrace}: "
-                  f"return={hist[-1]['mean_episode_return']}")
+                  f"return={hist[-1]['episode_return']}")
 
 
 if __name__ == "__main__":

@@ -23,19 +23,19 @@ from repro.launch.serve import serve
 print("serve:", serve("gemma3-1b", reduced=True, batch=2,
                       prompt_len=16, gen_len=8))
 
-# ---- 3. Distributed DRL: IMPALA with V-trace -------------------------------
+# ---- 3. Distributed DRL: IMPALA through the unified Trainer ----------------
 from repro.envs import CartPole
-from repro.core.networks import MLPPolicy
-from repro.launch.rl_train import run_impala
+from repro.core.trainer import Trainer, TrainerConfig
 
 env = CartPole()
-policy = MLPPolicy(env.obs_dim, env.n_actions)
-_, hist = run_impala(env, policy, iters=40, n_envs=16, unroll=16,
-                     policy_lag=2, use_vtrace=True, log_every=10)
+cfg = TrainerConfig(algo="impala", iters=40, superstep=10, n_envs=16,
+                    unroll=16, policy_lag=2, log_every=10)
+_, hist = Trainer(env, cfg).fit()
 print("impala:", hist[-1])
 
 # ---- 4. Evolution strategies (survey §7) -----------------------------------
 from repro.envs import Pendulum
+from repro.core.networks import MLPPolicy
 from repro.core.evo import ES
 
 penv = Pendulum()

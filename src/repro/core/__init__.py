@@ -1,11 +1,22 @@
 """repro.core — the survey's taxonomy as a composable framework.
 
-Axes (each independently selectable):
+Axes (each independently selectable through the unified Trainer):
   topology:  ps | allreduce | gossip        (survey §3)
   sync:      bsp | asp | ssp                (survey §6)
-  algo:      dqn | ppo | impala | a3c       (backprop training)
+  algo:      dqn | ppo | impala | a3c       (unified Agent registry)
   evo:       es | ga | erl                  (survey §7, evolution training)
+
+All backprop algorithms train through one seam: `agent.make(name, env)`
+builds an Agent (init / actor_policy / learner_step over a TrainState
+pytree) and `trainer.Trainer` drives it — fused supersteps, shard_map
+worker meshes, topology-routed gradients, sync-scheduled policy lag.
 """
 from repro.core.networks import MLPPolicy  # noqa: F401
 from repro.core.rollout import rollout  # noqa: F401
 from repro.core.vtrace import vtrace  # noqa: F401
+from repro.envs.api import Env  # noqa: F401
+from repro.envs.cartpole import CartPole  # noqa: F401
+from repro.envs.pendulum import Pendulum  # noqa: F401
+from repro.envs.gridworld import GridWorld  # noqa: F401
+from repro.core.agent import Agent, TrainState  # noqa: F401
+from repro.core.trainer import Trainer, TrainerConfig  # noqa: F401

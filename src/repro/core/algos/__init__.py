@@ -1,4 +1,4 @@
-from repro.core.algos.dqn import DQN  # noqa: F401
-from repro.core.algos.ppo import PPO  # noqa: F401
-from repro.core.algos.impala import IMPALA  # noqa: F401
-from repro.core.algos.a3c import A3C  # noqa: F401
+from repro.core.algos.dqn import DQN, DQNAgent  # noqa: F401
+from repro.core.algos.ppo import PPO, PPOAgent  # noqa: F401
+from repro.core.algos.impala import IMPALA, IMPALAAgent  # noqa: F401
+from repro.core.algos.a3c import A3C, A3CAgent  # noqa: F401

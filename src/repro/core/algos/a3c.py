@@ -13,6 +13,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.agent import PolicyGradientAgent, register
+from repro.core.networks import MLPPolicy
+from repro.optim import adamw, clip_by_global_norm
+
 
 @dataclasses.dataclass(frozen=True)
 class A3C:
@@ -62,3 +66,22 @@ class A3C:
         (params, opt_state), _ = jax.lax.scan(
             body, (params, opt_state), (trajs, boot_obs, delays_params))
         return params, opt_state
+
+
+class A3CAgent(PolicyGradientAgent):
+    """A3C behind the unified protocol. Its defining asynchrony is not
+    re-implemented here: run it under the Trainer with `sync="asp"` and
+    the delay schedule makes each worker compute n-step actor-critic
+    gradients against a stale copy of the network — the deterministic
+    rendering of Hogwild-style lock-free updates."""
+
+    def __init__(self, env, ring_size=1, total_iters=None, lr=1e-3,
+                 hidden=(64, 64), max_grad_norm=1.0, **algo_kwargs):
+        self.policy = MLPPolicy(env.obs_dim, env.n_actions, env.act_dim,
+                                hidden)
+        self.algo = A3C(self.policy, **algo_kwargs)
+        self.opt = clip_by_global_norm(adamw(lr), max_grad_norm)
+        self.ring_size = ring_size
+
+
+register("a3c", A3CAgent)

@@ -9,8 +9,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.agent import Agent, TrainState, register
 from repro.core.replay import UniformReplay, PrioritizedReplay
 from repro.models.layers import dense_init
+from repro.optim import adamw
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,3 +106,128 @@ class DQN:
             params["target"], params["online"])
         params = dict(params, steps=steps, target=target)
         return params, opt_state, replay_state, loss
+
+
+class _QPolicy:
+    """Adapter exposing a DQN net to the shared rollout engine: behavior
+    params are {"net": online-net, "eps": exploration rate} so ε rides
+    through `actor_policy` and the rollout stays algorithm-agnostic."""
+
+    discrete = True
+
+    def __init__(self, dqn: DQN):
+        self.dqn = dqn
+
+    def apply(self, params, obs):
+        q = DQN.q_values(params["net"], obs)
+        return q, q.max(axis=-1)
+
+    def sample(self, params, obs, key):
+        a = self.dqn.act({"online": params["net"]}, obs, key,
+                         params["eps"])
+        q = DQN.q_values(params["net"], obs)
+        logp = jnp.take_along_axis(jax.nn.log_softmax(q),
+                                   a[..., None], -1)[..., 0]
+        return a, logp
+
+
+class DQNAgent(Agent):
+    """DQN/Ape-X behind the unified protocol: the rollout trajectory is
+    flattened into transitions and pushed into a per-worker on-device
+    replay carried inside TrainState.extra; one (prioritized) TD update
+    runs per iteration after `warmup` iterations of pure collection."""
+
+    def __init__(self, env, ring_size=1, total_iters=None, lr=1e-3,
+                 hidden=(64, 64), prioritized=True, replay_capacity=20000,
+                 batch_size=64, warmup=8, eps_start=1.0, eps_end=0.05,
+                 eps_decay_steps=None, **algo_kwargs):
+        self.dqn = DQN(env.obs_dim, env.n_actions, hidden=tuple(hidden),
+                       prioritized=prioritized,
+                       replay_capacity=replay_capacity, **algo_kwargs)
+        self.policy = _QPolicy(self.dqn)
+        self.opt = adamw(lr)
+        self.ring_size = ring_size
+        self.batch_size = batch_size
+        self.warmup = warmup
+        self.eps_start = eps_start
+        self.eps_end = eps_end
+        if eps_decay_steps is None:  # anneal over 60% of the run
+            eps_decay_steps = max(1, int(0.6 * total_iters)) \
+                if total_iters else 200
+        self.eps_decay_steps = eps_decay_steps
+
+    def init(self, key):
+        params = self.dqn.init(key)
+        example = {"obs": jnp.zeros((self.dqn.obs_dim,)),
+                   "action": jnp.zeros((), jnp.int32),
+                   "reward": jnp.zeros(()),
+                   "next_obs": jnp.zeros((self.dqn.obs_dim,)),
+                   "done": jnp.zeros((), bool)}
+        return TrainState(params, self.opt.init(params["online"]),
+                          {"replay": self.dqn.replay.init(example)},
+                          self._ring_init(params["online"]),
+                          jnp.zeros((), jnp.int32))
+
+    def actor_policy(self, state, delay=0):
+        frac = jnp.clip(state.steps.astype(jnp.float32)
+                        / self.eps_decay_steps, 0.0, 1.0)
+        eps = self.eps_start + frac * (self.eps_end - self.eps_start)
+        return {"net": self._ring_read(state.ring, delay), "eps": eps}
+
+    def learner_step(self, state, traj, boot_obs, key,
+                     grad_tx=None, param_tx=None):
+        # traj -> transitions; at done steps the (autoreset) next_obs is
+        # wrong but unused: the TD target masks it with (1 - done).
+        next_obs = jnp.concatenate([traj["obs"][1:], boot_obs[None]], 0)
+        flat = lambda a: a.reshape((-1,) + a.shape[2:])
+        transitions = {"obs": flat(traj["obs"]),
+                       "action": flat(traj["action"]).astype(jnp.int32),
+                       "reward": flat(traj["reward"]),
+                       "next_obs": flat(next_obs),
+                       "done": flat(traj["done"])}
+        replay = self.dqn.replay
+        rstate = replay.add_batch(state.extra["replay"], transitions)
+
+        if self.dqn.prioritized:
+            batch, idx, w = replay.sample(rstate, key, self.batch_size)
+        else:
+            batch, idx = replay.sample(rstate, key, self.batch_size)
+            w = None
+
+        def loss_online(online):
+            return self.dqn.loss(dict(state.params, online=online),
+                                 batch, w)
+
+        (loss, td), grads = jax.value_and_grad(
+            loss_online, has_aux=True)(state.params["online"])
+        if grad_tx is not None:
+            grads = grad_tx(grads)
+        online, opt_state = self.opt.apply(state.params["online"],
+                                           state.opt_state, grads)
+        if param_tx is not None:
+            online = param_tx(online)
+        warm = state.steps >= self.warmup
+        if self.dqn.prioritized:
+            # keep the Ape-X max-priority inserts during warmup — |td|
+            # from the untrained net would under-prioritize early data
+            updated = replay.update_priorities(rstate, idx, td)
+            rstate = dict(rstate, prio=jnp.where(warm, updated["prio"],
+                                                 rstate["prio"]))
+        qsteps = state.params["steps"] + 1
+        target = jax.tree_util.tree_map(
+            lambda t, o: jnp.where(qsteps % self.dqn.target_update == 0,
+                                   o, t),
+            state.params["target"], online)
+        new_params = {"online": online, "target": target, "steps": qsteps}
+        # pure-collection warmup: keep filling the replay, hold the params
+        sel = lambda new, old: jax.tree_util.tree_map(
+            lambda a, b: jnp.where(warm, a, b), new, old)
+        params = sel(new_params, state.params)
+        opt_state = sel(opt_state, state.opt_state)
+        return TrainState(params, opt_state, {"replay": rstate},
+                          self._ring_push(state.ring, params["online"]),
+                          state.steps + 1), {"loss": jnp.where(warm, loss,
+                                                               0.0)}
+
+
+register("dqn", DQNAgent)

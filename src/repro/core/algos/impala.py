@@ -14,7 +14,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.agent import PolicyGradientAgent, register
+from repro.core.networks import MLPPolicy
 from repro.core.vtrace import vtrace, epsilon_correction
+from repro.optim import adamw, clip_by_global_norm
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,3 +76,19 @@ class IMPALA:
                                                     bootstrap_obs)
         params, opt_state = optimizer.apply(params, opt_state, grads)
         return params, opt_state, loss
+
+
+class IMPALAAgent(PolicyGradientAgent):
+    """IMPALA behind the unified protocol. The Trainer's §6 delay
+    schedule supplies the policy lag that V-trace corrects for."""
+
+    def __init__(self, env, ring_size=1, total_iters=None, lr=1e-3,
+                 hidden=(64, 64), max_grad_norm=1.0, **algo_kwargs):
+        self.policy = MLPPolicy(env.obs_dim, env.n_actions, env.act_dim,
+                                hidden)
+        self.algo = IMPALA(self.policy, **algo_kwargs)
+        self.opt = clip_by_global_norm(adamw(lr), max_grad_norm)
+        self.ring_size = ring_size
+
+
+register("impala", IMPALAAgent)

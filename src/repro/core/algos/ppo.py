@@ -8,6 +8,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.agent import PolicyGradientAgent, TrainState, register
+from repro.core.networks import MLPPolicy
+from repro.optim import adamw, clip_by_global_norm
+
 
 def gae(rewards, values, dones, bootstrap, gamma=0.99, lam=0.95):
     """Time-major (T,B). Returns (advantages, returns)."""
@@ -85,3 +89,61 @@ class PPO:
         (params, opt_state), losses = jax.lax.scan(
             epoch, (params, opt_state), jax.random.split(key, n_epochs))
         return params, opt_state, losses.mean()
+
+
+class PPOAgent(PolicyGradientAgent):
+    """PPO behind the unified protocol (shares init with the other
+    policy-gradient agents; the learner is its own epoch/minibatch
+    scan). With n_workers > 1 the Trainer's grad_tx all-reduces every
+    minibatch gradient — DD-PPO's decentralized synchronous exchange
+    (survey §3.2)."""
+
+    def __init__(self, env, ring_size=1, total_iters=None, lr=3e-4,
+                 hidden=(64, 64), n_epochs=4, n_minibatch=4,
+                 max_grad_norm=0.5, **algo_kwargs):
+        self.policy = MLPPolicy(env.obs_dim, env.n_actions, env.act_dim,
+                                hidden)
+        self.algo = PPO(self.policy, **algo_kwargs)
+        self.opt = clip_by_global_norm(adamw(lr), max_grad_norm)
+        self.n_epochs = n_epochs
+        self.n_minibatch = n_minibatch
+        self.ring_size = ring_size
+
+    def learner_step(self, state, traj, boot_obs, key,
+                     grad_tx=None, param_tx=None):
+        batch = self.algo.make_batch(state.params, traj, boot_obs)
+        n = batch["obs"].shape[0]
+        mb = n // self.n_minibatch
+
+        def epoch(carry, key_e):
+            params, opt_state = carry
+            perm = jax.random.permutation(key_e, n)
+
+            def minibatch(carry, i):
+                params, opt_state = carry
+                idx = jax.lax.dynamic_slice_in_dim(perm, i * mb, mb)
+                mbatch = jax.tree_util.tree_map(lambda a: a[idx], batch)
+                loss, grads = jax.value_and_grad(self.algo.loss)(params,
+                                                                 mbatch)
+                if grad_tx is not None:
+                    grads = grad_tx(grads)
+                params, opt_state = self.opt.apply(params, opt_state,
+                                                   grads)
+                return (params, opt_state), loss
+
+            (params, opt_state), losses = jax.lax.scan(
+                minibatch, (params, opt_state),
+                jnp.arange(self.n_minibatch))
+            return (params, opt_state), losses.mean()
+
+        (params, opt_state), losses = jax.lax.scan(
+            epoch, (state.params, state.opt_state),
+            jax.random.split(key, self.n_epochs))
+        if param_tx is not None:
+            params = param_tx(params)
+        return TrainState(params, opt_state, state.extra,
+                          self._ring_push(state.ring, params),
+                          state.steps + 1), {"loss": losses.mean()}
+
+
+register("ppo", PPOAgent)

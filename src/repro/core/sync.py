@@ -22,6 +22,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+MECHANISMS = ("bsp", "asp", "ssp")
+
 
 @dataclasses.dataclass(frozen=True)
 class SyncConfig:

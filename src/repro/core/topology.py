@@ -42,7 +42,8 @@ def exchange_grads(grads, axis: str, topology: str):
 
 def gossip_mix(params, axis: str, hops: int = 1):
     """One gossip round: average params with the ring neighbour(s)."""
-    n = jax.lax.axis_size(axis)
+    n = jax.lax.psum(1, axis)  # static axis size (jax.lax.axis_size
+    #                            does not exist in this jax version)
     mixed = params
     for h in range(hops):
         d = 2 ** h
@@ -52,6 +53,16 @@ def gossip_mix(params, axis: str, hops: int = 1):
         mixed = jax.tree_util.tree_map(
             lambda a, b: 0.5 * (a + b), mixed, nbr)
     return mixed
+
+
+def strip_worker_dim(tree):
+    """Drop the length-1 leading worker dim shard_map leaves on leaves."""
+    return jax.tree_util.tree_map(lambda a: jnp.squeeze(a, 0), tree)
+
+
+def restore_worker_dim(tree):
+    """Re-add the length-1 leading worker dim for shard_map outputs."""
+    return jax.tree_util.tree_map(lambda a: a[None], tree)
 
 
 def make_distributed_step(loss_fn, optimizer, topology: str, mesh,
@@ -66,9 +77,7 @@ def make_distributed_step(loss_fn, optimizer, topology: str, mesh,
 
     def worker_step(params, opt_state, batch):
         # shard_map keeps the (length-1) worker dim — strip and restore
-        sq = lambda t: jax.tree_util.tree_map(
-            lambda a: jnp.squeeze(a, 0), t)
-        ex = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
+        sq, ex = strip_worker_dim, restore_worker_dim
         params, opt_state, batch = sq(params), sq(opt_state), sq(batch)
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         grads = exchange_grads(grads, axis, topology)

@@ -1,0 +1,214 @@
+"""Unified Trainer: one fused, topology- and sync-aware training driver.
+
+Composes the survey's three acceleration axes over any registered Agent
+(repro.core.agent) instead of one hand-written driver per algorithm:
+
+  * batch simulation (§4.2): the shared rollout engine fuses env
+    dynamics + policy inference into the training program;
+  * system topology (§3, Fig. 3): with `n_workers > 1` the whole
+    iteration runs per-worker inside a `shard_map` over a `workers`
+    mesh axis, gradients routed through `topology.exchange_grads`
+    (ps/allreduce) or params mixed by `topology.gossip_mix` (gossip);
+  * synchronization (§6, Fig. 6): bsp/asp/ssp are rendered as a
+    deterministic policy-lag schedule (`sync.make_delays`) indexing each
+    agent's actor-param ring — workers act with stale params, exactly
+    the staleness the mechanisms differ by.
+
+`fit(fused=True)` scans `superstep` iterations (rollout -> learner_step
+-> lag-ring rotate) inside ONE jitted `lax.scan`: the Python loop
+dispatches iters/K programs and reads metrics back once per superstep
+instead of blocking on `float(...)` every iteration.  `fit(fused=False)`
+runs the identical iteration body one step at a time — numerically
+equivalent (tests/test_trainer.py) but host-bound; the speedup is
+measured in benchmarks/fused_superstep.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import agent as agent_api
+from repro.core.rollout import rollout
+from repro.core.sync import MECHANISMS, SyncConfig, make_delays
+from repro.core.topology import (TOPOLOGIES, exchange_grads, gossip_mix,
+                                 replicate_for, restore_worker_dim,
+                                 strip_worker_dim)
+
+AXIS = "workers"
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    algo: str = "impala"
+    iters: int = 60
+    superstep: int = 10        # K iterations fused per jitted dispatch
+    n_envs: int = 32           # total envs (split across workers)
+    unroll: int = 32           # rollout length T per iteration
+    n_workers: int = 1
+    topology: str = "allreduce"   # §3: ps | allreduce | gossip
+    sync: str = "bsp"             # §6: bsp | asp | ssp
+    policy_lag: int = 0        # deterministic actor-param lag floor
+    max_delay: int = 4         # asp worst-case extra staleness
+    staleness_bound: int = 1   # ssp bound on extra staleness
+    seed: int = 0
+    log_every: int = 10
+    algo_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ring_size(self) -> int:
+        """Actor-param history depth the sync mechanism can reach into."""
+        extra = {"bsp": 0, "asp": self.max_delay,
+                 "ssp": min(self.max_delay, self.staleness_bound)}
+        return self.policy_lag + extra[self.sync] + 1
+
+
+class Trainer:
+    """Drives any registered Agent; see module docstring."""
+
+    def __init__(self, env, cfg: TrainerConfig):
+        if cfg.topology not in TOPOLOGIES:
+            raise ValueError(f"topology {cfg.topology!r} not in "
+                             f"{TOPOLOGIES}")
+        if cfg.sync not in MECHANISMS:
+            raise ValueError(f"sync {cfg.sync!r} not in {MECHANISMS}")
+        if cfg.n_envs % cfg.n_workers:
+            raise ValueError(f"n_envs={cfg.n_envs} must divide evenly "
+                             f"across n_workers={cfg.n_workers}")
+        self.env = env
+        self.cfg = cfg
+        self.agent = agent_api.make(cfg.algo, env=env,
+                                    ring_size=cfg.ring_size,
+                                    total_iters=cfg.iters,
+                                    **cfg.algo_kwargs)
+        self.mesh = None
+        if cfg.n_workers > 1:
+            devs = jax.devices()
+            if len(devs) < cfg.n_workers:
+                raise RuntimeError(
+                    f"n_workers={cfg.n_workers} needs {cfg.n_workers} "
+                    f"devices but only {len(devs)} are visible; set "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{cfg.n_workers} before importing jax (the "
+                    f"rl_train CLI does this automatically)")
+            self.mesh = Mesh(np.array(devs[:cfg.n_workers]), (AXIS,))
+            self._grad_tx = lambda g: exchange_grads(g, AXIS, cfg.topology)
+            self._param_tx = ((lambda p: gossip_mix(p, AXIS))
+                              if cfg.topology == "gossip" else None)
+        else:
+            self._grad_tx = self._param_tx = None
+        self._base_key = jax.random.PRNGKey(cfg.seed)
+        self._step_cache = {}
+
+    # ---- one training iteration (shared by fused/unfused paths) ------
+    def _iteration(self, carry, xs):
+        state, env_state = carry
+        it, delay = xs
+        key = jax.random.fold_in(self._base_key, it)
+        if self.mesh is not None:
+            key = jax.random.fold_in(key, jax.lax.axis_index(AXIS))
+        k_roll, k_learn = jax.random.split(key)
+        actor = self.agent.actor_policy(state, delay)
+        traj, env_state = rollout(self.agent.policy, actor, self.env,
+                                  k_roll, env_state, self.cfg.unroll)
+        boot_obs = jax.vmap(self.env.obs)(env_state)
+        state, metrics = self.agent.learner_step(
+            state, traj, boot_obs, k_learn,
+            grad_tx=self._grad_tx, param_tx=self._param_tx)
+        metrics = dict(metrics, episode_return=traj["reward"].sum()
+                       / jnp.maximum(traj["done"].sum().astype(jnp.float32),
+                                     1.0))
+        if self.mesh is not None:
+            metrics = {k: jax.lax.pmean(v, AXIS)
+                       for k, v in metrics.items()}
+        return (state, env_state), metrics
+
+    # ---- superstep: k fused iterations in one program ----------------
+    def _superstep(self, k: int):
+        if k in self._step_cache:
+            return self._step_cache[k]
+
+        def body(state, env_state, its, delays):
+            (state, env_state), metrics = jax.lax.scan(
+                self._iteration, (state, env_state), (its, delays))
+            return state, env_state, metrics
+
+        if self.mesh is None:
+            fn = jax.jit(body)
+        else:
+            from jax.experimental.shard_map import shard_map
+
+            def worker(state, env_state, its, delays):
+                # shard_map keeps the (length-1) worker dim — strip/restore
+                state, env_state, metrics = body(
+                    strip_worker_dim(state), strip_worker_dim(env_state),
+                    its, delays[:, 0])
+                return (restore_worker_dim(state),
+                        restore_worker_dim(env_state), metrics)
+
+            w = P(AXIS)
+            fn = jax.jit(shard_map(
+                worker, mesh=self.mesh,
+                in_specs=(w, w, P(), P(None, AXIS)),
+                out_specs=(w, w, P()), check_rep=False))
+        self._step_cache[k] = fn
+        return fn
+
+    # ---- state/schedule construction ---------------------------------
+    def _init_all(self):
+        cfg = self.cfg
+        k_init, k_env, k_delay = jax.random.split(self._base_key, 3)
+        state = self.agent.init(k_init)
+        env_state = self.env.reset_batch(k_env, cfg.n_envs)
+        delays = make_delays(
+            SyncConfig(cfg.sync, cfg.n_workers, cfg.max_delay,
+                       cfg.staleness_bound),
+            cfg.iters, k_delay) + cfg.policy_lag
+        if self.mesh is not None:
+            W = cfg.n_workers
+            state = replicate_for(self.mesh, AXIS, state)
+            env_state = jax.tree_util.tree_map(
+                lambda a: a.reshape((W, a.shape[0] // W) + a.shape[1:]),
+                env_state)
+        else:
+            delays = delays[:, 0]
+        return state, env_state, delays
+
+    def lower(self, k: int = None):
+        """Lower (without running) one superstep — lets benchmarks
+        inspect the collective schedule (HLO) per topology."""
+        k = self.cfg.superstep if k is None else k
+        state, env_state, delays = self._init_all()
+        its = jnp.arange(k, dtype=jnp.int32)
+        return self._superstep(k).lower(state, env_state, its, delays[:k])
+
+    # ---- the driver --------------------------------------------------
+    def fit(self, fused: bool = True):
+        """Train for cfg.iters iterations. Returns (TrainState, history);
+        with n_workers > 1 the returned state is worker 0's replica."""
+        cfg = self.cfg
+        state, env_state, delays = self._init_all()
+        K = cfg.superstep if fused else 1
+        history = []
+        start = 0
+        while start < cfg.iters:
+            k = min(K, cfg.iters - start)
+            step = self._superstep(k)
+            its = jnp.arange(start, start + k, dtype=jnp.int32)
+            state, env_state, metrics = step(state, env_state, its,
+                                             delays[start:start + k])
+            metrics = jax.device_get(metrics)  # ONE host sync per chunk
+            for j in range(k):
+                it = start + j
+                if it % cfg.log_every == 0 or it == cfg.iters - 1:
+                    history.append({"iter": it, **{
+                        name: round(float(v[j]), 4)
+                        for name, v in sorted(metrics.items())}})
+            start += k
+        if self.mesh is not None:
+            state = jax.tree_util.tree_map(lambda a: a[0], state)
+        return state, history

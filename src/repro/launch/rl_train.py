@@ -1,161 +1,114 @@
-"""Distributed DRL launcher — the survey's taxonomy as a CLI.
+"""Unified distributed-DRL launcher: config parsing + ``Trainer.fit``.
 
   PYTHONPATH=src python -m repro.launch.rl_train --algo impala \
-      --env cartpole --topology allreduce --sync bsp --iters 60
+      --env cartpole --topology gossip --sync ssp --n-workers 4 --iters 20
 
-Selects: algorithm (impala/ppo/a3c/dqn), environment, topology
-(§3: ps/allreduce/gossip), synchronization (§6: bsp/asp/ssp via
-policy-lag), actor count. Actor rollouts and learner updates are
-separate jitted programs (the Actor/Learner split of Fig. 3).
+Every axis of the survey's taxonomy is one orthogonal flag, resolved by
+the unified Agent/Trainer API (repro.core.agent / repro.core.trainer):
+
+  --algo      a3c | dqn | impala | ppo    (Agent registry)
+  --topology  ps | allreduce | gossip     (§3, Fig. 3 — gradient/param
+                                           exchange over the worker mesh)
+  --sync      bsp | asp | ssp             (§6, Fig. 6 — policy-lag
+                                           schedule into the actor ring)
+  --n-workers N                           (shard_map `workers` mesh axis;
+                                           on CPU the launcher forces N
+                                           host devices before jax loads)
+
+Training runs as fused supersteps: ``--superstep K`` iterations of
+rollout -> learner_step -> lag-ring rotate execute inside one jitted
+``lax.scan`` with a single host round-trip per dispatch; ``--unfused``
+falls back to per-iteration dispatch (same numerics, for debugging and
+the benchmarks/fused_superstep.py comparison).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.algos import IMPALA, PPO, A3C, DQN
-from repro.core.networks import MLPPolicy
-from repro.core.rollout import rollout
-from repro.envs import CartPole, Pendulum, GridWorld
-from repro.optim import adamw, clip_by_global_norm
-
-ENVS = {"cartpole": CartPole, "pendulum": Pendulum, "gridworld": GridWorld}
+# static mirrors of the library tuples so the parser builds without
+# importing jax (XLA_FLAGS must be set first); cross-checked in main()
+ALGOS = ("a3c", "dqn", "impala", "ppo")
+ENV_NAMES = ("cartpole", "pendulum", "gridworld")
+TOPOLOGY_CHOICES = ("allreduce", "ps", "gossip")
+SYNC_CHOICES = ("bsp", "asp", "ssp")
 
 
-def run_impala(env, policy, iters, n_envs=32, unroll=32, lr=1e-3,
-               policy_lag=1, use_vtrace=True, seed=0, log_every=10):
-    """IMPALA with explicit policy-lag: actors run params `policy_lag`
-    learner-updates old; V-trace corrects the off-policy gap."""
-    algo = IMPALA(policy, use_vtrace=use_vtrace)
-    opt = clip_by_global_norm(adamw(lr), 1.0)
-    key = jax.random.PRNGKey(seed)
-    params = policy.init(key)
-    opt_state = opt.init(params)
-    # actor params ring buffer (policy lag)
-    lagged = [params] * (policy_lag + 1)
-    env_state = env.reset_batch(key, n_envs)
-    roll = jax.jit(lambda p, k, s: rollout(policy, p, env, k, s, unroll),
-                   static_argnames=())
-    history = []
-    ret_acc, ret_n = 0.0, 0
-    for it in range(iters):
-        key = jax.random.fold_in(key, it)
-        actor_params = lagged[0]           # oldest = behavior policy
-        traj, env_state = roll(actor_params, key, env_state)
-        boot_obs = jax.vmap(env.obs)(env_state)
-        params, opt_state, loss = algo.learner_step(
-            params, opt_state, traj, boot_obs, opt)
-        lagged = lagged[1:] + [params]
-        ep_rew = float(traj["reward"].sum() / jnp.maximum(
-            traj["done"].sum(), 1))
-        ret_acc += ep_rew
-        ret_n += 1
-        if it % log_every == 0 or it == iters - 1:
-            history.append({"iter": it, "loss": round(float(loss), 4),
-                            "mean_episode_return":
-                                round(ret_acc / ret_n, 2)})
-            ret_acc, ret_n = 0.0, 0
-    return params, history
-
-
-def run_ppo(env, policy, iters, n_envs=16, unroll=64, lr=3e-4, seed=0,
-            log_every=5):
-    algo = PPO(policy)
-    opt = clip_by_global_norm(adamw(lr), 0.5)
-    key = jax.random.PRNGKey(seed)
-    params = policy.init(key)
-    opt_state = opt.init(params)
-    env_state = env.reset_batch(key, n_envs)
-    roll = jax.jit(lambda p, k, s: rollout(policy, p, env, k, s, unroll))
-    history = []
-    for it in range(iters):
-        key = jax.random.fold_in(key, it)
-        traj, env_state = roll(params, key, env_state)
-        boot_obs = jax.vmap(env.obs)(env_state)
-        batch = algo.make_batch(params, traj, boot_obs)
-        params, opt_state, loss = algo.update(params, opt_state, batch,
-                                              key, opt)
-        ep = float(traj["reward"].sum() / jnp.maximum(
-            traj["done"].sum(), 1))
-        if it % log_every == 0 or it == iters - 1:
-            history.append({"iter": it, "loss": round(float(loss), 4),
-                            "mean_episode_return": round(ep, 2)})
-    return params, history
-
-
-def run_dqn(env, iters, n_envs=16, lr=1e-3, seed=0, log_every=20,
-            prioritized=True):
-    algo = DQN(env.obs_dim, env.n_actions, prioritized=prioritized,
-               replay_capacity=20000)
-    opt = adamw(lr)
-    key = jax.random.PRNGKey(seed)
-    params = algo.init(key)
-    opt_state = opt.init(params["online"])
-    ex = {"obs": jnp.zeros((env.obs_dim,)),
-          "action": jnp.zeros((), jnp.int32),
-          "reward": jnp.zeros(()),
-          "next_obs": jnp.zeros((env.obs_dim,)),
-          "done": jnp.zeros((), bool)}
-    rstate = algo.replay.init(ex)
-    env_state = env.reset_batch(key, n_envs)
-
-    @jax.jit
-    def actor_step(params, env_state, key, eps):
-        obs = jax.vmap(env.obs)(env_state)
-        a = algo.act(params, obs, key, eps)
-        env_state, next_obs, r, d = env.step_autoreset(env_state, a, key)
-        batch = {"obs": obs, "action": a, "reward": r,
-                 "next_obs": next_obs, "done": d}
-        return env_state, batch, r
-
-    history = []
-    rew_acc = 0.0
-    for it in range(iters):
-        key = jax.random.fold_in(key, it)
-        eps = max(0.05, 1.0 - it / (0.6 * iters))
-        env_state, batch, r = actor_step(params, env_state, key, eps)
-        rstate = algo.replay.add_batch(rstate, batch)
-        if it > 50:
-            params, opt_state, rstate, loss = algo.learner_step(
-                params, opt_state, rstate, key, opt)
-        rew_acc += float(r.mean())
-        if it % log_every == 0 or it == iters - 1:
-            history.append({"iter": it,
-                            "mean_reward": round(rew_acc / log_every, 3)})
-            rew_acc = 0.0
-    return params, history
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--algo", default="impala",
-                    choices=("impala", "ppo", "dqn"))
-    ap.add_argument("--env", default="cartpole", choices=list(ENVS))
+def build_parser():
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.rl_train",
+        description="Unified distributed-DRL launcher (survey taxonomy "
+                    "as orthogonal flags).")
+    ap.add_argument("--algo", default="impala", choices=ALGOS)
+    ap.add_argument("--env", default="cartpole", choices=ENV_NAMES)
     ap.add_argument("--iters", type=int, default=60)
+    ap.add_argument("--superstep", type=int, default=10,
+                    help="iterations fused per jitted dispatch")
     ap.add_argument("--n-envs", type=int, default=32)
-    ap.add_argument("--policy-lag", type=int, default=1)
-    ap.add_argument("--no-vtrace", action="store_true")
-    args = ap.parse_args()
-    env = ENVS[args.env]()
+    ap.add_argument("--unroll", type=int, default=32)
+    ap.add_argument("--n-workers", type=int, default=1)
+    ap.add_argument("--topology", default="allreduce",
+                    choices=TOPOLOGY_CHOICES)
+    ap.add_argument("--sync", default="bsp", choices=SYNC_CHOICES)
+    ap.add_argument("--policy-lag", type=int, default=0)
+    ap.add_argument("--max-delay", type=int, default=4)
+    ap.add_argument("--staleness-bound", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--no-vtrace", action="store_true",
+                    help="impala only: naive targets instead of V-trace")
+    ap.add_argument("--unfused", action="store_true",
+                    help="per-iteration dispatch instead of fused scan")
+    return ap
+
+
+def main(argv=None):
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    if args.n_workers > 1 and "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.n_workers}").strip()
+
+    from repro.core import agent as agent_api
+    from repro.core.sync import MECHANISMS
+    from repro.core.topology import TOPOLOGIES
+    from repro.core.trainer import Trainer, TrainerConfig
+    from repro.envs import CartPole, GridWorld, Pendulum
+
+    envs = {"cartpole": CartPole, "pendulum": Pendulum,
+            "gridworld": GridWorld}
+    # the CLI tuples are static so the parser stays jax-free; fail loudly
+    # if they ever drift from the library
+    assert set(TOPOLOGY_CHOICES) == set(TOPOLOGIES)
+    assert set(SYNC_CHOICES) == set(MECHANISMS)
+    if args.algo not in agent_api.available():
+        ap.error(f"--algo {args.algo} not registered; available: "
+                 f"{agent_api.available()}")
+
+    algo_kwargs = {}
+    if args.algo == "impala":
+        algo_kwargs["use_vtrace"] = not args.no_vtrace
+    cfg = TrainerConfig(
+        algo=args.algo, iters=args.iters, superstep=args.superstep,
+        n_envs=args.n_envs, unroll=args.unroll, n_workers=args.n_workers,
+        topology=args.topology, sync=args.sync,
+        policy_lag=args.policy_lag, max_delay=args.max_delay,
+        staleness_bound=args.staleness_bound, seed=args.seed,
+        log_every=args.log_every, algo_kwargs=algo_kwargs)
+    env = envs[args.env]()
     t0 = time.time()
-    if args.algo == "dqn":
-        _, history = run_dqn(env, args.iters, args.n_envs)
-    else:
-        policy = MLPPolicy(env.obs_dim, env.n_actions, env.act_dim)
-        runner = run_impala if args.algo == "impala" else run_ppo
-        kwargs = {}
-        if args.algo == "impala":
-            kwargs = {"policy_lag": args.policy_lag,
-                      "use_vtrace": not args.no_vtrace}
-        _, history = runner(env, policy, args.iters, args.n_envs,
-                            **kwargs)
-    print(json.dumps({"algo": args.algo, "env": args.env,
-                      "wall_s": round(time.time() - t0, 1),
-                      "history": history[-5:]}))
+    _, history = Trainer(env, cfg).fit(fused=not args.unfused)
+    print(json.dumps({
+        "algo": args.algo, "env": args.env, "topology": args.topology,
+        "sync": args.sync, "n_workers": args.n_workers,
+        "fused": not args.unfused,
+        "wall_s": round(time.time() - t0, 1), "history": history[-5:]}))
 
 
 if __name__ == "__main__":

@@ -10,6 +10,25 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 jax.config.update("jax_enable_x64", False)
 
+# Optional-hypothesis fallback (see requirements-dev.txt): when
+# hypothesis is absent, @given property tests skip instead of aborting
+# the whole collection, and plain tests in the same module still run.
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
 
 @pytest.fixture(scope="session")
 def rng():

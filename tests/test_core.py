@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st  # hypothesis or skip-fallback
 
 from repro.core.vtrace import vtrace
 from repro.core.replay import UniformReplay, PrioritizedReplay
@@ -143,27 +144,5 @@ def test_replay_update_priorities(rng):
     assert float(st_["prio"][1]) == pytest.approx(3.0, abs=1e-4)
 
 
-# --------------------------------------- learning sanity (integration)
-def test_impala_policy_lag_vtrace_beats_naive(rng):
-    """Survey §6.1: under policy lag, V-trace correction must not be
-    worse than the uncorrected learner (measured by final return)."""
-    from repro.envs import CartPole
-    from repro.core.networks import MLPPolicy
-    from repro.launch.rl_train import run_impala
-    env = CartPole()
-    rets = {}
-    for use_vtrace in (True, False):
-        pol = MLPPolicy(env.obs_dim, env.n_actions, hidden=(32,))
-        _, hist = run_impala(env, pol, iters=40, n_envs=16, unroll=16,
-                             policy_lag=4, use_vtrace=use_vtrace, seed=3,
-                             log_every=40)
-        rets[use_vtrace] = hist[-1]["mean_episode_return"]
-    assert rets[True] >= 0.6 * rets[False], rets
-
-
-def test_dqn_improves_on_gridworld(rng):
-    from repro.envs import GridWorld
-    from repro.launch.rl_train import run_dqn
-    env = GridWorld(n=4, max_steps=16)
-    _, hist = run_dqn(env, 300, 16, log_every=100)
-    assert hist[-1]["mean_reward"] > hist[0]["mean_reward"]
+# Learning-sanity integration tests live in tests/test_trainer.py (they
+# run through the unified Agent/Trainer API and need no hypothesis).

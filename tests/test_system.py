@@ -24,15 +24,13 @@ def test_serving_generates_tokens():
 
 
 def test_impala_cartpole_learns():
+    from repro.core.trainer import Trainer, TrainerConfig
     from repro.envs import CartPole
-    from repro.core.networks import MLPPolicy
-    from repro.launch.rl_train import run_impala
     env = CartPole()
-    pol = MLPPolicy(env.obs_dim, env.n_actions)
-    _, hist = run_impala(env, pol, iters=80, n_envs=32, unroll=32,
-                         policy_lag=1, seed=0, log_every=20)
-    assert hist[-1]["mean_episode_return"] > \
-        hist[0]["mean_episode_return"], hist
+    cfg = TrainerConfig(algo="impala", iters=80, superstep=20, n_envs=32,
+                        unroll=32, policy_lag=1, seed=0, log_every=20)
+    _, hist = Trainer(env, cfg).fit()
+    assert hist[-1]["episode_return"] > hist[0]["episode_return"], hist
 
 
 def test_trunk_policy_ppo_update():
@@ -65,12 +63,18 @@ def test_trunk_policy_ppo_update():
 def test_prioritized_vs_uniform_dqn_both_learn():
     """Ape-X claim (survey §3.1): prioritized replay trains at least as
     well as uniform on a sparse-reward task."""
+    from repro.core.trainer import Trainer, TrainerConfig
     from repro.envs import GridWorld
-    from repro.launch.rl_train import run_dqn
     env = GridWorld(n=4, max_steps=16)
     finals = {}
     for prio in (True, False):
-        _, hist = run_dqn(env, 250, 16, log_every=50, prioritized=prio)
-        finals[prio] = hist[-1]["mean_reward"]
+        cfg = TrainerConfig(algo="dqn", iters=60, superstep=10,
+                            n_envs=16, unroll=8, log_every=20,
+                            algo_kwargs={"prioritized": prio,
+                                         "warmup": 5,
+                                         "eps_decay_steps": 40,
+                                         "target_update": 20})
+        _, hist = Trainer(env, cfg).fit()
+        finals[prio] = hist[-1]["episode_return"]
     assert finals[True] > -0.01 or finals[True] >= finals[False] - 0.05, \
         finals

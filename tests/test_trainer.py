@@ -1,0 +1,219 @@
+"""Unified Agent/Trainer API: registry round-trip, fused-vs-unfused
+equivalence, the (topology x sync) smoke matrix on a fake 4-device mesh,
+CLI contract, and the learning-sanity claims migrated off the legacy
+per-algorithm drivers."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import agent as agent_api
+from repro.core.trainer import Trainer, TrainerConfig
+from repro.envs import CartPole, GridWorld
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ALGOS = ("a3c", "dqn", "impala", "ppo")
+
+
+# ------------------------------------------------------------- registry
+def test_registry_lists_all_algorithms():
+    assert set(ALGOS) <= set(agent_api.available())
+
+
+@pytest.mark.parametrize("name", ALGOS)
+def test_registry_roundtrip(name):
+    """Every algorithm constructs by name, inits a TrainState pytree,
+    and serves behavior params for any (clipped) delay."""
+    env = CartPole()
+    ag = agent_api.make(name, env=env, ring_size=3)
+    state = ag.init(jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    assert isinstance(jax.tree_util.tree_unflatten(treedef, leaves),
+                      agent_api.TrainState)
+    fresh = ag.actor_policy(state, 0)
+    stale = ag.actor_policy(state, 99)  # clipped to ring depth
+    for a, b in zip(jax.tree_util.tree_leaves(fresh),
+                    jax.tree_util.tree_leaves(stale)):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(a, b)  # init: whole ring identical
+
+
+def test_unknown_algo_raises():
+    with pytest.raises(KeyError, match="unknown algorithm"):
+        agent_api.make("nope", env=CartPole())
+
+
+def test_ring_rotation_tracks_policy_lag():
+    """After one learner step, delay-0 params are the new ones and
+    delay-1 params are the previous ones."""
+    env = CartPole()
+    ag = agent_api.make("impala", env=env, ring_size=2,
+                        hidden=(8,))
+    state = ag.init(jax.random.PRNGKey(0))
+    old = state.params
+    key = jax.random.PRNGKey(1)
+    env_state = env.reset_batch(key, 4)
+    from repro.core.rollout import rollout
+    traj, env_state = rollout(ag.policy, ag.actor_policy(state, 0), env,
+                              key, env_state, 4)
+    boot = jax.vmap(env.obs)(env_state)
+    state, metrics = ag.learner_step(state, traj, boot, key)
+    assert jnp.isfinite(metrics["loss"])
+    lagged = ag.actor_policy(state, 1)
+    for a, b in zip(jax.tree_util.tree_leaves(lagged),
+                    jax.tree_util.tree_leaves(old)):
+        np.testing.assert_allclose(a, b)
+    newest = ag.actor_policy(state, 0)
+    diff = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(newest),
+        jax.tree_util.tree_leaves(old)))
+    assert diff > 0
+
+
+# ------------------------------------------- fused superstep equivalence
+def test_fused_superstep_equals_unfused():
+    """Acceptance: K fused iterations in one scan produce the same
+    params and metrics as per-iteration dispatch for a fixed seed."""
+    env = CartPole()
+
+    def run(fused):
+        cfg = TrainerConfig(algo="impala", iters=8, superstep=4,
+                            n_envs=8, unroll=8, log_every=4, seed=1,
+                            algo_kwargs={"hidden": (16,)})
+        return Trainer(env, cfg).fit(fused=fused)
+
+    s_fused, h_fused = run(True)
+    s_unfused, h_unfused = run(False)
+    for a, b in zip(jax.tree_util.tree_leaves(s_fused.params),
+                    jax.tree_util.tree_leaves(s_unfused.params)):
+        np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-6)
+    assert [r["iter"] for r in h_fused] == [r["iter"] for r in h_unfused]
+    for rf, ru in zip(h_fused, h_unfused):
+        assert rf["loss"] == pytest.approx(ru["loss"], rel=1e-3)
+
+
+# ------------------------------------- topology x sync smoke (4 devices)
+_MATRIX_SCRIPT = textwrap.dedent("""
+    import itertools, json, math
+    from repro.core.trainer import Trainer, TrainerConfig
+    from repro.envs import CartPole
+    env = CartPole()
+    out = {}
+    for topo, sync in itertools.product(("allreduce", "ps", "gossip"),
+                                        ("bsp", "asp", "ssp")):
+        cfg = TrainerConfig(algo="impala", iters=4, superstep=2,
+                            n_envs=8, unroll=4, n_workers=4,
+                            topology=topo, sync=sync, max_delay=2,
+                            log_every=2, algo_kwargs={"hidden": (8,)})
+        _, hist = Trainer(env, cfg).fit()
+        last = hist[-1]
+        out[f"{topo}/{sync}"] = {
+            "loss": last["loss"], "ret": last["episode_return"],
+            "finite": all(math.isfinite(v) for r in hist
+                          for v in r.values())}
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def matrix_results():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", _MATRIX_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_matrix_covers_all_combinations(matrix_results):
+    assert len(matrix_results) == 9
+
+
+def test_matrix_all_finite_and_nondegenerate(matrix_results):
+    for combo, res in matrix_results.items():
+        assert res["finite"], combo
+        assert res["ret"] > 0, (combo, res)  # CartPole returns positive
+
+
+def test_matrix_sync_topologies_agree(matrix_results):
+    """ps and allreduce are mathematically identical aggregations — the
+    same training run must come out (numerically) the same."""
+    for sync in ("bsp", "asp", "ssp"):
+        a = matrix_results[f"allreduce/{sync}"]["loss"]
+        p = matrix_results[f"ps/{sync}"]["loss"]
+        assert a == pytest.approx(p, rel=1e-3), (sync, a, p)
+
+
+# ----------------------------------------------------------- validation
+def test_bad_topology_and_sync_raise():
+    env = CartPole()
+    with pytest.raises(ValueError, match="topology"):
+        Trainer(env, TrainerConfig(topology="star"))
+    with pytest.raises(ValueError, match="sync"):
+        Trainer(env, TrainerConfig(sync="eventual"))
+    with pytest.raises(ValueError, match="divide"):
+        Trainer(env, TrainerConfig(n_envs=6, n_workers=4))
+
+
+# -------------------------------------------------------- CLI contract
+def test_cli_a3c_with_topology_and_sync_flags():
+    """Satellites: --topology/--sync/--n-workers exist and A3C is
+    reachable from the CLI via the registry."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.rl_train", "--algo", "a3c",
+         "--env", "cartpole", "--topology", "allreduce", "--sync", "asp",
+         "--iters", "4", "--superstep", "2", "--n-envs", "8",
+         "--unroll", "4", "--log-every", "2"],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=SRC), timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["algo"] == "a3c" and out["sync"] == "asp"
+    assert out["history"]
+
+
+def test_cli_rejects_unknown_topology():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.rl_train",
+         "--topology", "star"],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=SRC), timeout=120)
+    assert r.returncode != 0
+    assert "--topology" in r.stderr
+
+
+# ------------------------------------------- learning sanity (migrated)
+def test_impala_policy_lag_vtrace_beats_naive():
+    """Survey §6.1: under policy lag, V-trace correction must not be
+    worse than the uncorrected learner (measured by final return)."""
+    env = CartPole()
+    rets = {}
+    for use_vtrace in (True, False):
+        cfg = TrainerConfig(algo="impala", iters=40, superstep=10,
+                            n_envs=16, unroll=16, policy_lag=4, seed=3,
+                            log_every=40,
+                            algo_kwargs={"hidden": (32,),
+                                         "use_vtrace": use_vtrace})
+        _, hist = Trainer(env, cfg).fit()
+        rets[use_vtrace] = hist[-1]["episode_return"]
+    assert rets[True] >= 0.6 * rets[False], rets
+
+
+def test_dqn_improves_on_gridworld():
+    env = GridWorld(n=4, max_steps=16)
+    cfg = TrainerConfig(algo="dqn", iters=60, superstep=10, n_envs=16,
+                        unroll=8, log_every=20,
+                        algo_kwargs={"warmup": 5, "eps_decay_steps": 40,
+                                     "target_update": 20})
+    _, hist = Trainer(env, cfg).fit()
+    assert hist[-1]["episode_return"] > hist[0]["episode_return"], hist
