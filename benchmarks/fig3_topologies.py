@@ -19,8 +19,8 @@ _SCRIPT = textwrap.dedent("""
     import json
     from repro.core.trainer import Trainer, TrainerConfig
     from repro.launch.hlo_analysis import collective_bytes
-    from repro.envs import CartPole
-    env = CartPole()
+    import repro.envs as envs
+    env = envs.make("cartpole")
     out = {}
     for topo in ("allreduce", "ps", "gossip"):
         cfg = TrainerConfig(algo="impala", iters=30, superstep=10,

@@ -3,22 +3,23 @@ copy pipeline (io_callback round-trip per step)."""
 import jax
 import jax.numpy as jnp
 
+import repro.envs as envs
 from benchmarks.common import time_fn, emit
 from repro.core.networks import MLPPolicy
 from repro.core.rollout import rollout
-from repro.envs import CartPole
 from repro.envs.host_env import HostPipelined
 
 
 def run():
     n, T = 64, 32
-    pol = MLPPolicy(4, 2, hidden=(32,))
+    base = envs.make("cartpole")
+    pol = MLPPolicy.for_spec(base.spec, hidden=(32,))
     params = pol.init(jax.random.PRNGKey(0))
     rows = []
     results = {}
-    for name, env in (("zero_copy", CartPole()),
-                      ("host_pipeline", HostPipelined(CartPole()))):
-        state = CartPole().reset_batch(jax.random.PRNGKey(1), n)
+    for name, env in (("zero_copy", base),
+                      ("host_pipeline", HostPipelined(base))):
+        state = env.reset_batch(jax.random.PRNGKey(1), n)
         fn = jax.jit(lambda p, k, s: rollout(pol, p, env, k, s, T))
         us = time_fn(fn, params, jax.random.PRNGKey(2), state,
                      warmup=1, iters=3)

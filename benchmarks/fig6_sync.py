@@ -11,11 +11,11 @@ import jax
 from benchmarks.common import emit
 from repro.core.sync import SyncConfig, sync_cost_model
 from repro.core.trainer import Trainer, TrainerConfig
-from repro.envs import CartPole
+import repro.envs as envs
 
 
 def run():
-    env = CartPole()
+    env = envs.make("cartpole")
     rows = []
     for mech in ("bsp", "ssp", "asp"):
         cfg = TrainerConfig(algo="a3c", iters=60, superstep=10,

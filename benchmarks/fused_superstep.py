@@ -11,7 +11,7 @@ import time
 
 from benchmarks.common import emit
 from repro.core.trainer import Trainer, TrainerConfig
-from repro.envs import CartPole
+import repro.envs as envs
 
 
 def _timed_fit(trainer, fused):
@@ -22,7 +22,7 @@ def _timed_fit(trainer, fused):
 
 
 def run():
-    env = CartPole()
+    env = envs.make("cartpole")
     cfg = TrainerConfig(algo="impala", iters=96, superstep=16, n_envs=16,
                         unroll=16, log_every=96)
     trainer = Trainer(env, cfg)

@@ -4,16 +4,16 @@ for ES/GA) and generation throughput."""
 import jax
 import jax.numpy as jnp
 
+import repro.envs as envs
 from benchmarks.common import time_fn, emit
 from repro.core.evo import ES, DeepGA
 from repro.core.networks import MLPPolicy
-from repro.envs import CartPole, Pendulum
 
 
 def run():
     rows = []
-    env = Pendulum()
-    pol = MLPPolicy(env.obs_dim, 0, env.act_dim, hidden=(32, 32))
+    env = envs.make("pendulum")
+    pol = MLPPolicy.for_spec(env.spec, hidden=(32, 32))
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(
         pol.init(jax.random.PRNGKey(0))))
 
@@ -25,8 +25,8 @@ def run():
     rows.append(("sec7/es_generation", round(us, 1),
                  f"comm_bytes={es_comm};pop=32"))
 
-    cenv = CartPole()
-    cpol = MLPPolicy(cenv.obs_dim, cenv.n_actions, hidden=(32, 32))
+    cenv = envs.make("cartpole")
+    cpol = MLPPolicy.for_spec(cenv.spec, hidden=(32, 32))
     ga = DeepGA(cpol, cenv, pop_size=32, max_steps=100)
     gstate = ga.init(jax.random.PRNGKey(0))
     gstep = jax.jit(ga.step)

@@ -4,15 +4,15 @@ the survey, realized as vmap width on one device."""
 import jax
 import jax.numpy as jnp
 
+import repro.envs as envs
 from benchmarks.common import time_fn, emit
 from repro.core.networks import MLPPolicy
 from repro.core.rollout import rollout
-from repro.envs import CartPole
 
 
 def run():
-    env = CartPole()
-    pol = MLPPolicy(env.obs_dim, env.n_actions, hidden=(32,))
+    env = envs.make("cartpole")
+    pol = MLPPolicy.for_spec(env.spec, hidden=(32,))
     params = pol.init(jax.random.PRNGKey(0))
     T = 64
     rows = []

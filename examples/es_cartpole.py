@@ -1,19 +1,20 @@
-"""Evolution-based training (survey §7): ES and Deep-GA on CartPole,
-reporting the per-generation communication bytes that make evolutionary
-methods massively parallelizable.
+"""Evolution-based training (survey §7): ES and Deep-GA on the
+registry-resolved CartPole (`envs.make("cartpole")`), reporting the
+per-generation communication bytes that make evolutionary methods
+massively parallelizable.
 
   PYTHONPATH=src python examples/es_cartpole.py
 """
 import jax
 
-from repro.envs import CartPole
+import repro.envs as envs
 from repro.core.networks import MLPPolicy
 from repro.core.evo import ES, DeepGA
 
 
 def main():
-    env = CartPole()
-    pol = MLPPolicy(env.obs_dim, env.n_actions, hidden=(16,))
+    env = envs.make("cartpole")
+    pol = MLPPolicy.for_spec(env.spec, hidden=(16,))
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(
         pol.init(jax.random.PRNGKey(0))))
 

@@ -1,15 +1,16 @@
-"""IMPALA with explicit policy-lag through the unified Trainer —
-reproduces the survey's §6.1 claim: V-trace correction recovers
-performance lost to actor/learner policy lag.
+"""IMPALA with explicit policy-lag through the unified Trainer on the
+registry-resolved CartPole (`envs.make("cartpole")`) — reproduces the
+survey's §6.1 claim: V-trace correction recovers performance lost to
+actor/learner policy lag.
 
   PYTHONPATH=src python examples/impala_pendulum.py
 """
+import repro.envs as envs
 from repro.core.trainer import Trainer, TrainerConfig
-from repro.envs import CartPole
 
 
 def main():
-    env = CartPole()
+    env = envs.make("cartpole")
     for lag in (0, 4):
         for vtrace in (True, False):
             cfg = TrainerConfig(

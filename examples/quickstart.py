@@ -4,8 +4,10 @@
 
 1. Train a reduced assigned-architecture LM for a few steps.
 2. Serve it with a KV cache.
-3. Run distributed DRL (IMPALA + V-trace) on the zero-copy CartPole.
-4. Run an ES generation (evolution-based training, survey §7).
+3. Run distributed DRL (IMPALA + V-trace) on the zero-copy CartPole,
+   resolved through the env registry (`envs.make("cartpole")`).
+4. Run an ES generation (evolution-based training, survey §7) with the
+   policy built from the env's spec (`MLPPolicy.for_spec`).
 """
 import jax
 import jax.numpy as jnp
@@ -24,22 +26,21 @@ print("serve:", serve("gemma3-1b", reduced=True, batch=2,
                       prompt_len=16, gen_len=8))
 
 # ---- 3. Distributed DRL: IMPALA through the unified Trainer ----------------
-from repro.envs import CartPole
+import repro.envs as envs
 from repro.core.trainer import Trainer, TrainerConfig
 
-env = CartPole()
+env = envs.make("cartpole")          # name registry, parallel to agent.make
 cfg = TrainerConfig(algo="impala", iters=40, superstep=10, n_envs=16,
                     unroll=16, policy_lag=2, log_every=10)
 _, hist = Trainer(env, cfg).fit()
 print("impala:", hist[-1])
 
 # ---- 4. Evolution strategies (survey §7) -----------------------------------
-from repro.envs import Pendulum
 from repro.core.networks import MLPPolicy
 from repro.core.evo import ES
 
-penv = Pendulum()
-ppol = MLPPolicy(penv.obs_dim, 0, penv.act_dim, hidden=(16,))
+penv = envs.make("pendulum")
+ppol = MLPPolicy.for_spec(penv.spec, hidden=(16,))
 es = ES(ppol, penv, pop_size=16, max_steps=100)
 theta = es.init(jax.random.PRNGKey(0))
 theta, fitness, comm = jax.jit(es.step)(theta, jax.random.PRNGKey(1))

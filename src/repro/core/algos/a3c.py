@@ -77,8 +77,7 @@ class A3CAgent(PolicyGradientAgent):
 
     def __init__(self, env, ring_size=1, total_iters=None, lr=1e-3,
                  hidden=(64, 64), max_grad_norm=1.0, **algo_kwargs):
-        self.policy = MLPPolicy(env.obs_dim, env.n_actions, env.act_dim,
-                                hidden)
+        self.policy = MLPPolicy.for_spec(env.spec, hidden)
         self.algo = A3C(self.policy, **algo_kwargs)
         self.opt = clip_by_global_norm(adamw(lr), max_grad_norm)
         self.ring_size = ring_size

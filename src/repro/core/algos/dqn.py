@@ -141,7 +141,9 @@ class DQNAgent(Agent):
                  hidden=(64, 64), prioritized=True, replay_capacity=20000,
                  batch_size=64, warmup=8, eps_start=1.0, eps_end=0.05,
                  eps_decay_steps=None, **algo_kwargs):
-        self.dqn = DQN(env.obs_dim, env.n_actions, hidden=tuple(hidden),
+        spec = env.spec
+        self.obs_space = spec.observation
+        self.dqn = DQN(spec.obs_dim, spec.n_actions, hidden=tuple(hidden),
                        prioritized=prioritized,
                        replay_capacity=replay_capacity, **algo_kwargs)
         self.policy = _QPolicy(self.dqn)
@@ -158,10 +160,12 @@ class DQNAgent(Agent):
 
     def init(self, key):
         params = self.dqn.init(key)
-        example = {"obs": jnp.zeros((self.dqn.obs_dim,)),
+        obs_zero = jnp.zeros(self.obs_space.shape,
+                             self.obs_space.dtype)
+        example = {"obs": obs_zero,
                    "action": jnp.zeros((), jnp.int32),
                    "reward": jnp.zeros(()),
-                   "next_obs": jnp.zeros((self.dqn.obs_dim,)),
+                   "next_obs": obs_zero,
                    "done": jnp.zeros((), bool)}
         return TrainState(params, self.opt.init(params["online"]),
                           {"replay": self.dqn.replay.init(example)},
@@ -176,14 +180,14 @@ class DQNAgent(Agent):
 
     def learner_step(self, state, traj, boot_obs, key,
                      grad_tx=None, param_tx=None):
-        # traj -> transitions; at done steps the (autoreset) next_obs is
-        # wrong but unused: the TD target masks it with (1 - done).
-        next_obs = jnp.concatenate([traj["obs"][1:], boot_obs[None]], 0)
+        # traj -> transitions; the rollout surfaces the TRUE successor
+        # obs (pre-autoreset at episode boundaries), so replayed
+        # transitions are exact even across resets.
         flat = lambda a: a.reshape((-1,) + a.shape[2:])
         transitions = {"obs": flat(traj["obs"]),
                        "action": flat(traj["action"]).astype(jnp.int32),
                        "reward": flat(traj["reward"]),
-                       "next_obs": flat(next_obs),
+                       "next_obs": flat(traj["next_obs"]),
                        "done": flat(traj["done"])}
         replay = self.dqn.replay
         rstate = replay.add_batch(state.extra["replay"], transitions)

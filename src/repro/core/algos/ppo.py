@@ -101,8 +101,7 @@ class PPOAgent(PolicyGradientAgent):
     def __init__(self, env, ring_size=1, total_iters=None, lr=3e-4,
                  hidden=(64, 64), n_epochs=4, n_minibatch=4,
                  max_grad_norm=0.5, **algo_kwargs):
-        self.policy = MLPPolicy(env.obs_dim, env.n_actions, env.act_dim,
-                                hidden)
+        self.policy = MLPPolicy.for_spec(env.spec, hidden)
         self.algo = PPO(self.policy, **algo_kwargs)
         self.opt = clip_by_global_norm(adamw(lr), max_grad_norm)
         self.n_epochs = n_epochs

@@ -40,10 +40,13 @@ class ERL:
         learner = self.policy.init(ks[-1])
         lflat, _ = jax.flatten_util.ravel_pytree(learner)
         replay = UniformReplay(self.replay_capacity)
-        example = {"obs": jnp.zeros((self.env.obs_dim,)),
-                   "action": jnp.zeros((self.env.act_dim,)),
+        spec = self.env.spec
+        obs_zero = jnp.zeros(spec.observation.shape,
+                             spec.observation.dtype)
+        example = {"obs": obs_zero,
+                   "action": jnp.zeros((spec.act_dim,)),
                    "reward": jnp.zeros(()),
-                   "next_obs": jnp.zeros((self.env.obs_dim,)),
+                   "next_obs": obs_zero,
                    "done": jnp.zeros((), bool)}
         return {"pop": jnp.stack(thetas), "learner": lflat,
                 "replay": replay.init(example), "gen": 0}, replay

@@ -9,14 +9,29 @@ from repro.models.layers import dense_init
 
 class MLPPolicy:
     """Actor-critic MLP. Discrete: categorical logits; continuous:
-    tanh-gaussian (state-independent log-std)."""
+    tanh-gaussian (state-independent log-std) squashed into the action
+    box `act_mid ± act_scale` — construct with `for_spec` so the bounds
+    come from the env's EnvSpec instead of being hard-coded."""
 
-    def __init__(self, obs_dim, n_actions=0, act_dim=1, hidden=(64, 64)):
+    def __init__(self, obs_dim, n_actions=0, act_dim=1, hidden=(64, 64),
+                 act_mid=0.0, act_scale=1.0):
         self.obs_dim = obs_dim
         self.n_actions = n_actions
         self.act_dim = act_dim
         self.hidden = hidden
         self.discrete = n_actions > 0
+        self.act_mid = act_mid
+        self.act_scale = act_scale
+
+    @classmethod
+    def for_spec(cls, spec, hidden=(64, 64)):
+        """Build a policy matching an EnvSpec (repro.envs.spec): output
+        head width and continuous action bounds read off the spec."""
+        a = spec.action
+        if a.discrete:
+            return cls(spec.obs_dim, a.n, hidden=hidden)
+        return cls(spec.obs_dim, 0, a.size, hidden=hidden,
+                   act_mid=a.midpoint, act_scale=a.half_range)
 
     def init(self, key):
         sizes = (self.obs_dim,) + self.hidden
@@ -62,7 +77,7 @@ class MLPPolicy:
         a = pi + std * eps
         logp = (-0.5 * ((a - pi) / std) ** 2
                 - jnp.log(std) - 0.5 * jnp.log(2 * jnp.pi)).sum(-1)
-        return jnp.tanh(a) * 2.0, logp  # scaled for pendulum torque
+        return jnp.tanh(a) * self.act_scale + self.act_mid, logp
 
     def log_prob(self, params, obs, action):
         pi, v = self.apply(params, obs)
@@ -72,8 +87,9 @@ class MLPPolicy:
                                      -1)[..., 0]
             ent = -jnp.sum(jax.nn.softmax(pi) * jax.nn.log_softmax(pi), -1)
             return lp, v, ent
-        # invert the tanh scaling
-        raw = jnp.arctanh(jnp.clip(action / 2.0, -0.999, 0.999))
+        # invert the tanh squashing into the action box
+        raw = jnp.arctanh(jnp.clip((action - self.act_mid)
+                                   / self.act_scale, -0.999, 0.999))
         std = jnp.exp(params["log_std"])
         lp = (-0.5 * ((raw - pi) / std) ** 2
               - jnp.log(std) - 0.5 * jnp.log(2 * jnp.pi)).sum(-1)

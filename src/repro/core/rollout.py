@@ -16,20 +16,23 @@ def rollout(policy, params, env, key, env_state, T):
     """Collect T steps from a batch of envs.
 
     Returns (trajectory, final_env_state). trajectory arrays are
-    time-major (T, B, ...): obs, action, logp, value, reward, done.
+    time-major (T, B, ...): obs, action, logp, value, reward, done,
+    next_obs. `next_obs` is the TRUE successor observation — at `done`
+    steps it is the pre-autoreset terminal obs (see
+    Env.step_autoreset), so replay/bootstrap consumers never see the
+    fresh-reset obs at an episode boundary.
     """
-    n = jax.tree_util.tree_leaves(env_state)[0].shape[0]
-
     def step(carry, key_t):
         env_state = carry
         obs = jax.vmap(env.obs)(env_state)
         ka, kr = jax.random.split(key_t)
         action, logp = policy.sample(params, obs, ka)
         _, value = policy.apply(params, obs)
-        env_state, _, reward, done = env.step_autoreset(
+        env_state, next_obs, reward, done = env.step_autoreset(
             env_state, action, kr)
         return env_state, {"obs": obs, "action": action, "logp": logp,
-                           "value": value, "reward": reward, "done": done}
+                           "value": value, "reward": reward, "done": done,
+                           "next_obs": next_obs}
 
     keys = jax.random.split(key, T)
     env_state, traj = jax.lax.scan(step, env_state, keys)
@@ -46,8 +49,11 @@ def rollout_fresh(policy, params, env, key, T, n):
 
 def episode_return(policy, params, env, key, max_steps=200):
     """Deterministic-ish single-episode return (greedy for discrete,
-    mean action for continuous) — the ES/GA fitness function."""
+    mean action for continuous) — the ES/GA fitness function. The mean
+    continuous action is squashed into the env's action box read off
+    its EnvSpec (no hard-coded torque bounds)."""
     state = env.reset(key)
+    act_space = env.spec.action
 
     def step(carry, _):
         state, done, total = carry
@@ -56,7 +62,8 @@ def episode_return(policy, params, env, key, max_steps=200):
         if policy.discrete:
             action = jnp.argmax(pi, axis=-1)
         else:
-            action = jnp.tanh(pi) * 2.0
+            action = (act_space.midpoint
+                      + jnp.tanh(pi) * act_space.half_range)
         nstate, _, reward, ndone = env.step(state, action)
         total = total + jnp.where(done, 0.0, reward)
         ndone = done | ndone

@@ -104,9 +104,35 @@ class Trainer:
         self._base_key = jax.random.PRNGKey(cfg.seed)
         self._step_cache = {}
 
+    # ---- episode accounting (carried across iterations) --------------
+    @staticmethod
+    def _episode_stats(ep_run, ep_last, traj):
+        """Exact per-episode returns from a (T, B) reward/done block.
+
+        `ep_run` carries each env's within-episode reward sum across
+        iteration boundaries, so `episode_return` is the mean return of
+        episodes that *completed* this iteration — never a raw reward
+        sum. With zero completions the last known value (NaN before the
+        first episode ever finishes) is reported instead of a silently
+        wrong number."""
+        def acct(carry, xs):
+            run, tot, cnt = carry
+            r, d = xs
+            run = run + r
+            tot = tot + jnp.where(d, run, 0.0).sum()
+            cnt = cnt + d.sum()
+            run = jnp.where(d, 0.0, run)
+            return (run, tot, cnt), None
+
+        (ep_run, tot, cnt), _ = jax.lax.scan(
+            acct, (ep_run, jnp.zeros(()), jnp.zeros((), jnp.int32)),
+            (traj["reward"], traj["done"]))
+        ep_ret = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1), ep_last)
+        return ep_run, ep_ret
+
     # ---- one training iteration (shared by fused/unfused paths) ------
     def _iteration(self, carry, xs):
-        state, env_state = carry
+        state, sim = carry
         it, delay = xs
         key = jax.random.fold_in(self._base_key, it)
         if self.mesh is not None:
@@ -114,41 +140,42 @@ class Trainer:
         k_roll, k_learn = jax.random.split(key)
         actor = self.agent.actor_policy(state, delay)
         traj, env_state = rollout(self.agent.policy, actor, self.env,
-                                  k_roll, env_state, self.cfg.unroll)
+                                  k_roll, sim["env"], self.cfg.unroll)
         boot_obs = jax.vmap(self.env.obs)(env_state)
         state, metrics = self.agent.learner_step(
             state, traj, boot_obs, k_learn,
             grad_tx=self._grad_tx, param_tx=self._param_tx)
-        metrics = dict(metrics, episode_return=traj["reward"].sum()
-                       / jnp.maximum(traj["done"].sum().astype(jnp.float32),
-                                     1.0))
+        ep_run, ep_ret = self._episode_stats(sim["ep_run"],
+                                             sim["ep_last"], traj)
+        metrics = dict(metrics, episode_return=ep_ret)
         if self.mesh is not None:
             metrics = {k: jax.lax.pmean(v, AXIS)
                        for k, v in metrics.items()}
-        return (state, env_state), metrics
+        sim = {"env": env_state, "ep_run": ep_run, "ep_last": ep_ret}
+        return (state, sim), metrics
 
     # ---- superstep: k fused iterations in one program ----------------
     def _superstep(self, k: int):
         if k in self._step_cache:
             return self._step_cache[k]
 
-        def body(state, env_state, its, delays):
-            (state, env_state), metrics = jax.lax.scan(
-                self._iteration, (state, env_state), (its, delays))
-            return state, env_state, metrics
+        def body(state, sim, its, delays):
+            (state, sim), metrics = jax.lax.scan(
+                self._iteration, (state, sim), (its, delays))
+            return state, sim, metrics
 
         if self.mesh is None:
             fn = jax.jit(body)
         else:
             from jax.experimental.shard_map import shard_map
 
-            def worker(state, env_state, its, delays):
+            def worker(state, sim, its, delays):
                 # shard_map keeps the (length-1) worker dim — strip/restore
-                state, env_state, metrics = body(
-                    strip_worker_dim(state), strip_worker_dim(env_state),
+                state, sim, metrics = body(
+                    strip_worker_dim(state), strip_worker_dim(sim),
                     its, delays[:, 0])
                 return (restore_worker_dim(state),
-                        restore_worker_dim(env_state), metrics)
+                        restore_worker_dim(sim), metrics)
 
             w = P(AXIS)
             fn = jax.jit(shard_map(
@@ -163,7 +190,11 @@ class Trainer:
         cfg = self.cfg
         k_init, k_env, k_delay = jax.random.split(self._base_key, 3)
         state = self.agent.init(k_init)
-        env_state = self.env.reset_batch(k_env, cfg.n_envs)
+        # simulation-side carry: batched env state + episode accounting
+        # (ep_last starts NaN: no episode has finished yet)
+        sim = {"env": self.env.reset_batch(k_env, cfg.n_envs),
+               "ep_run": jnp.zeros((cfg.n_envs,)),
+               "ep_last": jnp.full((), jnp.nan)}
         delays = make_delays(
             SyncConfig(cfg.sync, cfg.n_workers, cfg.max_delay,
                        cfg.staleness_bound),
@@ -171,27 +202,29 @@ class Trainer:
         if self.mesh is not None:
             W = cfg.n_workers
             state = replicate_for(self.mesh, AXIS, state)
-            env_state = jax.tree_util.tree_map(
-                lambda a: a.reshape((W, a.shape[0] // W) + a.shape[1:]),
-                env_state)
+            sim = {"env": jax.tree_util.tree_map(
+                       lambda a: a.reshape((W, a.shape[0] // W)
+                                           + a.shape[1:]), sim["env"]),
+                   "ep_run": sim["ep_run"].reshape(W, -1),
+                   "ep_last": jnp.broadcast_to(sim["ep_last"], (W,))}
         else:
             delays = delays[:, 0]
-        return state, env_state, delays
+        return state, sim, delays
 
     def lower(self, k: int = None):
         """Lower (without running) one superstep — lets benchmarks
         inspect the collective schedule (HLO) per topology."""
         k = self.cfg.superstep if k is None else k
-        state, env_state, delays = self._init_all()
+        state, sim, delays = self._init_all()
         its = jnp.arange(k, dtype=jnp.int32)
-        return self._superstep(k).lower(state, env_state, its, delays[:k])
+        return self._superstep(k).lower(state, sim, its, delays[:k])
 
     # ---- the driver --------------------------------------------------
     def fit(self, fused: bool = True):
         """Train for cfg.iters iterations. Returns (TrainState, history);
         with n_workers > 1 the returned state is worker 0's replica."""
         cfg = self.cfg
-        state, env_state, delays = self._init_all()
+        state, sim, delays = self._init_all()
         K = cfg.superstep if fused else 1
         history = []
         start = 0
@@ -199,8 +232,8 @@ class Trainer:
             k = min(K, cfg.iters - start)
             step = self._superstep(k)
             its = jnp.arange(start, start + k, dtype=jnp.int32)
-            state, env_state, metrics = step(state, env_state, its,
-                                             delays[start:start + k])
+            state, sim, metrics = step(state, sim, its,
+                                       delays[start:start + k])
             metrics = jax.device_get(metrics)  # ONE host sync per chunk
             for j in range(k):
                 it = start + j

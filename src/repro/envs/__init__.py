@@ -1,4 +1,27 @@
+"""Environment substrate: spec'd, registered, wrapped, scenario-batched.
+
+  env = envs.make("cartpole-rand")          # name registry
+  env.spec                                  # typed obs/action spaces
+  envs.register("my-env", MyEnv)            # 3rd-party registration
+
+See repro.envs.api for the Env protocol, repro.envs.wrappers for the
+pure-functional wrapper stack, and ROADMAP.md ("Extending the env
+substrate") for how to add envs, wrappers and scenario families.
+"""
 from repro.envs.api import Env  # noqa: F401
+from repro.envs.spec import EnvSpec, Space, box, discrete  # noqa: F401
+from repro.envs.registry import available, make, register  # noqa: F401
+from repro.envs.wrappers import (ActionRepeat, ObsNormalize,  # noqa: F401
+                                 RewardScale, TimeLimit, Wrapper)
 from repro.envs.cartpole import CartPole  # noqa: F401
 from repro.envs.pendulum import Pendulum  # noqa: F401
 from repro.envs.gridworld import GridWorld  # noqa: F401
+
+# -- wrapped variants: prove the substrate carries composed workloads --
+# (HostPipelined stays unregistered — it is a benchmark baseline, see
+# repro.envs.host_env / benchmarks/fig5_simulation.py.)
+register("pendulum-norm",
+         lambda **kw: ObsNormalize(RewardScale(Pendulum(**kw), 0.1)))
+register("cartpole-repeat",
+         lambda repeat=2, max_steps=100, **kw: ActionRepeat(
+             TimeLimit(CartPole(**kw), max_steps), repeat))

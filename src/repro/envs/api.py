@@ -1,51 +1,158 @@
-"""Zero-copy batch environment API (survey §4.2, TPU-native).
+"""Zero-copy batch environment API v2 (survey §4.2, TPU-native).
 
 Environments are pure functions over jnp state — `reset`/`step` fuse into
 the same XLA program as policy inference and the optimizer, so there is
 no host↔device traffic at all (the TPU adaptation of Isaac Gym's
 "Tensor API" zero-copy design). Batch simulation = `jax.vmap`.
+
+v2 adds three substrate pieces, mirroring the agent seam
+(repro.core.agent):
+
+  * every env publishes an `EnvSpec` (repro.envs.spec) — typed
+    observation/action spaces with dtypes and bounds — instead of
+    `obs_dim`/`n_actions`/`act_dim` class attributes (kept as derived
+    properties for compatibility);
+  * **scenario batching**: constructors accept a physics/layout
+    parameter pytree (`scenario=` overrides, `ranges=` per-episode
+    randomization bounds). The sampled scenario lives *inside the env
+    state* under `state["scn"]`, so one `vmap`'d rollout batches a
+    distribution of scenario variants (domain-randomized masses, grid
+    sizes, goal placements) with zero changes to the rollout engine or
+    Trainer;
+  * `step_autoreset` surfaces the **pre-reset terminal observation**
+    (the true successor obs) so bootstrapping at episode boundaries
+    never sees the fresh-reset obs, and exposes an `autoreset_merge`
+    hook that wrappers use to carry state (e.g. running obs statistics)
+    across episode boundaries.
+
+The name registry lives in repro.envs.registry (`envs.make("cartpole")`,
+exactly parallel to `agent.make`).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.envs.spec import EnvSpec
+
 
 class Env:
-    """Single-instance pure-functional environment; vmap for batches."""
-    obs_dim: int
-    n_actions: int = 0        # 0 -> continuous
-    act_dim: int = 1
+    """Single-instance pure-functional environment; vmap for batches.
 
-    def reset(self, key) -> dict:
+    Subclasses implement `spec`, `reset_scenario(key, scn)`, `obs` and
+    `step` (reading physics/layout from `state["scn"]`), and optionally
+    `default_scenario` / `sample_scenario` for scenario batching.
+    Envs that predate the scenario API may instead override `reset`
+    directly — every base-class facility still works.
+    """
+
+    def __init__(self, scenario=None, ranges=None):
+        base = {k: jnp.asarray(v)
+                for k, v in self.default_scenario().items()}
+        for k, v in (scenario or {}).items():
+            if k not in base:
+                raise KeyError(f"unknown scenario field {k!r}; "
+                               f"available: {sorted(base)}")
+            base[k] = jnp.asarray(v, base[k].dtype)
+        for k in (ranges or {}):
+            if k not in base:
+                raise KeyError(f"unknown scenario range {k!r}; "
+                               f"available: {sorted(base)}")
+        self._scenario = base
+        self._ranges = dict(ranges or {})
+
+    # -- the contract --------------------------------------------------
+    @property
+    def spec(self) -> EnvSpec:
         raise NotImplementedError
 
-    def step(self, state: dict, action) -> Tuple[dict, jnp.ndarray,
-                                                 jnp.ndarray, jnp.ndarray]:
+    def reset_scenario(self, key, scn) -> dict:
+        """Initial state (without the "scn" entry) for one scenario."""
+        raise NotImplementedError
+
+    def obs(self, state) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def step(self, state, action) -> Tuple[dict, jnp.ndarray,
+                                           jnp.ndarray, jnp.ndarray]:
         """-> (state, obs, reward, done)"""
         raise NotImplementedError
 
-    def obs(self, state: dict) -> jnp.ndarray:
-        raise NotImplementedError
+    # -- seed-API compatibility (derived from the spec) ----------------
+    @property
+    def obs_dim(self) -> int:
+        return self.spec.obs_dim
 
-    # -- batched convenience -----------------------------------------
+    @property
+    def n_actions(self) -> int:
+        return self.spec.n_actions
+
+    @property
+    def act_dim(self) -> int:
+        return self.spec.act_dim
+
+    # -- scenario batching ---------------------------------------------
+    def default_scenario(self) -> dict:
+        """Physics/layout parameter pytree; {} = scenario-free env."""
+        return {}
+
+    def sample_scenario(self, key) -> dict:
+        """Draw one scenario: base values with `ranges` entries sampled
+        uniformly (integers inclusive, floats half-open) per episode —
+        domain randomization happens here, once per reset."""
+        scn = dict(self._scenario)
+        for i, name in enumerate(sorted(self._ranges)):
+            lo, hi = self._ranges[name]
+            k = jax.random.fold_in(key, i)
+            base = scn[name]
+            if jnp.issubdtype(base.dtype, jnp.integer):
+                scn[name] = jax.random.randint(
+                    k, base.shape, int(lo), int(hi) + 1, base.dtype)
+            else:
+                scn[name] = jax.random.uniform(
+                    k, base.shape, base.dtype, lo, hi)
+        return scn
+
+    def reset(self, key) -> dict:
+        """Sample a scenario, then the initial state for it. The drawn
+        scenario rides in `state["scn"]` so batched state <=> batched
+        scenarios."""
+        k_scn, k_state = jax.random.split(key)
+        scn = self.sample_scenario(k_scn)
+        state = dict(self.reset_scenario(k_state, scn))
+        state["scn"] = scn
+        return state
+
+    # -- batched convenience -------------------------------------------
     def reset_batch(self, key, n):
         return jax.vmap(self.reset)(jax.random.split(key, n))
 
     def step_batch(self, state, action):
         return jax.vmap(self.step)(state, action)
 
+    def autoreset_merge(self, fresh, new_state, sel):
+        """Merge fresh (reset) and stepped state at episode boundaries;
+        `sel(a, b)` picks a where the episode ended. Wrappers override
+        to keep persistent wrapper state (e.g. obs statistics) alive
+        across resets."""
+        return jax.tree_util.tree_map(sel, fresh, new_state)
+
     def step_autoreset(self, state, action, key):
         """Vectorized step with per-env auto-reset on done (the standard
-        batch-simulation pattern — episodes never block the batch)."""
+        batch-simulation pattern — episodes never block the batch).
+
+        Returns `(state, obs, reward, done)` where `obs` is the
+        **pre-reset** observation emitted by `step` — at `done` steps
+        this is the terminal observation, NOT the fresh-reset one, so
+        consumers can bootstrap correctly at episode boundaries. The
+        post-reset observation of the new episode is `obs(state)`.
+        """
         new_state, obs, reward, done = self.step_batch(state, action)
         n = done.shape[0]
         fresh = jax.vmap(self.reset)(jax.random.split(key, n))
         sel = lambda a, b: jnp.where(
             done.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
-        state = jax.tree_util.tree_map(sel, fresh, new_state)
-        obs = jax.vmap(self.obs)(state)
+        state = self.autoreset_merge(fresh, new_state, sel)
         return state, obs, reward, done

@@ -1,14 +1,23 @@
-"""CartPole-v1 dynamics in pure jnp (discrete, 2 actions)."""
+"""CartPole-v1 dynamics in pure jnp (discrete, 2 actions).
+
+Physics constants live in the scenario pytree (`state["scn"]`), so the
+same `vmap`'d rollout can train across a batch of pole-mass/length/
+force variants — the `cartpole-rand` scenario family draws a fresh
+variant per episode (domain randomization).
+"""
 import jax
 import jax.numpy as jnp
 
 from repro.envs.api import Env
+from repro.envs.registry import register
+from repro.envs.spec import EnvSpec, box, discrete
+
+# per-episode randomization bounds for the `cartpole-rand` family
+RAND_RANGES = {"masspole": (0.05, 0.2), "length": (0.3, 0.7),
+               "force_mag": (8.0, 12.0)}
 
 
 class CartPole(Env):
-    obs_dim = 4
-    n_actions = 2
-
     gravity = 9.8
     masscart = 1.0
     masspole = 0.1
@@ -19,7 +28,19 @@ class CartPole(Env):
     theta_lim = 12 * jnp.pi / 180
     max_steps = 200
 
-    def reset(self, key):
+    @property
+    def spec(self):
+        return EnvSpec("cartpole",
+                       observation=box((4,)),
+                       action=discrete(2),
+                       episode_len=self.max_steps)
+
+    def default_scenario(self):
+        return {"gravity": self.gravity, "masscart": self.masscart,
+                "masspole": self.masspole, "length": self.length,
+                "force_mag": self.force_mag}
+
+    def reset_scenario(self, key, scn):
         s = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
         return {"s": s, "t": jnp.zeros((), jnp.int32)}
 
@@ -27,15 +48,17 @@ class CartPole(Env):
         return state["s"]
 
     def step(self, state, action):
+        scn = state["scn"]
         x, x_dot, th, th_dot = state["s"]
-        force = jnp.where(action > 0, self.force_mag, -self.force_mag)
-        total_mass = self.masscart + self.masspole
-        pml = self.masspole * self.length
+        force = jnp.where(action > 0, scn["force_mag"],
+                          -scn["force_mag"])
+        total_mass = scn["masscart"] + scn["masspole"]
+        pml = scn["masspole"] * scn["length"]
         costh, sinth = jnp.cos(th), jnp.sin(th)
         temp = (force + pml * th_dot ** 2 * sinth) / total_mass
-        th_acc = (self.gravity * sinth - costh * temp) / (
-            self.length * (4.0 / 3.0 - self.masspole * costh ** 2
-                           / total_mass))
+        th_acc = (scn["gravity"] * sinth - costh * temp) / (
+            scn["length"] * (4.0 / 3.0 - scn["masspole"] * costh ** 2
+                             / total_mass))
         x_acc = temp - pml * th_acc * costh / total_mass
         x = x + self.tau * x_dot
         x_dot = x_dot + self.tau * x_acc
@@ -45,4 +68,10 @@ class CartPole(Env):
         t = state["t"] + 1
         done = ((jnp.abs(x) > self.x_lim) | (jnp.abs(th) > self.theta_lim)
                 | (t >= self.max_steps))
-        return ({"s": s, "t": t}, s, jnp.float32(1.0), done)
+        return ({"s": s, "t": t, "scn": scn}, s, jnp.float32(1.0), done)
+
+
+register("cartpole", CartPole)
+register("cartpole-rand",
+         lambda ranges=None, **kw: CartPole(
+             ranges=dict(RAND_RANGES, **(ranges or {})), **kw))

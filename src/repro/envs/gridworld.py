@@ -1,38 +1,74 @@
-"""N×N gridworld with a fixed goal (discrete, 4 actions) — the
-token-friendly env used to drive transformer-trunk policies."""
+"""N×N gridworld (discrete, 4 actions) — the token-friendly env used to
+drive transformer-trunk policies.
+
+Layout (grid size and goal placement) lives in the scenario pytree, so
+a batch of envs can mix sizes and goals inside one `vmap`'d rollout;
+`gridworld-rand` re-draws both per episode.
+"""
 import jax
 import jax.numpy as jnp
 
 from repro.envs.api import Env
+from repro.envs.registry import register
+from repro.envs.spec import EnvSpec, box, discrete
 
 
 class GridWorld(Env):
-    n_actions = 4
-
-    def __init__(self, n=8, max_steps=64):
+    def __init__(self, n=8, max_steps=64, random_goal=False,
+                 scenario=None, ranges=None):
         self.n = n
         self.max_steps = max_steps
-        self.obs_dim = 4  # (x, y, gx, gy) normalized
-        self.goal = jnp.array([n - 1, n - 1])
+        self.random_goal = random_goal
+        super().__init__(scenario, ranges)
 
-    def reset(self, key):
-        pos = jax.random.randint(key, (2,), 0, self.n)
+    @property
+    def spec(self):
+        return EnvSpec("gridworld",
+                       observation=box((4,), low=0.0, high=1.0),
+                       action=discrete(4),
+                       episode_len=self.max_steps)
+
+    def default_scenario(self):
+        return {"n": jnp.int32(self.n),
+                "goal": jnp.array([self.n - 1, self.n - 1], jnp.int32)}
+
+    def sample_scenario(self, key):
+        scn = super().sample_scenario(key)
+        if self.random_goal:
+            scn["goal"] = jax.random.randint(
+                jax.random.fold_in(key, 101), (2,), 0, scn["n"], jnp.int32)
+        # keep the goal reachable when "n" is randomized/overridden
+        # below the default layout's grid size
+        scn["goal"] = jnp.minimum(scn["goal"], scn["n"] - 1)
+        return scn
+
+    def reset_scenario(self, key, scn):
+        pos = jax.random.randint(key, (2,), 0, scn["n"])
         return {"pos": pos, "t": jnp.zeros((), jnp.int32)}
 
     def obs(self, state):
-        return jnp.concatenate([state["pos"], self.goal]
-                               ).astype(jnp.float32) / self.n
+        scn = state["scn"]
+        return (jnp.concatenate([state["pos"], scn["goal"]])
+                .astype(jnp.float32) / scn["n"])
 
     def step(self, state, action):
+        scn = state["scn"]
         delta = jnp.array([[0, 1], [0, -1], [1, 0], [-1, 0]])[action]
-        pos = jnp.clip(state["pos"] + delta, 0, self.n - 1)
+        pos = jnp.clip(state["pos"] + delta, 0, scn["n"] - 1)
         t = state["t"] + 1
-        at_goal = jnp.all(pos == self.goal)
+        at_goal = jnp.all(pos == scn["goal"])
         reward = jnp.where(at_goal, 1.0, -0.01)
         done = at_goal | (t >= self.max_steps)
-        s = {"pos": pos, "t": t}
+        s = {"pos": pos, "t": t, "scn": scn}
         return s, self.obs(s), reward, done
 
     def token_obs(self, state):
         """Integer token encoding (for transformer-trunk policies)."""
-        return state["pos"][0] * self.n + state["pos"][1]
+        return state["pos"][0] * state["scn"]["n"] + state["pos"][1]
+
+
+register("gridworld", GridWorld)
+register("gridworld-rand",
+         lambda n=8, ranges=None, **kw: GridWorld(
+             n=n, random_goal=True,
+             ranges=dict({"n": (4, n)}, **(ranges or {})), **kw))

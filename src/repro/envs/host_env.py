@@ -1,9 +1,11 @@
-"""Host-pipeline environment wrapper (survey Fig. 5a baseline).
+"""Host-pipeline wrapper (survey Fig. 5a baseline).
 
-Forces every `step` through an `io_callback` to the host — recreating the
-CPU-simulation pipeline where intermediate data is copied host<->device
-every iteration. Used ONLY by benchmarks/fig5_simulation.py to measure
-what zero-copy on-device simulation buys (survey §4.2).
+A `Wrapper` that forces every `step` through an `io_callback` to the
+host — recreating the CPU-simulation pipeline where intermediate data is
+copied host<->device every iteration. Used ONLY by
+benchmarks/fig5_simulation.py to measure what zero-copy on-device
+simulation buys (survey §4.2); being a regular wrapper it composes with
+the rest of the stack and inherits the spec/registry plumbing for free.
 """
 import numpy as np
 
@@ -12,28 +14,22 @@ import jax.numpy as jnp
 from jax.experimental import io_callback
 
 from repro.envs.api import Env
+from repro.envs.wrappers import Wrapper
 
 
-class HostPipelined(Env):
+class HostPipelined(Wrapper):
     def __init__(self, inner: Env):
-        self.inner = inner
-        self.obs_dim = inner.obs_dim
-        self.n_actions = inner.n_actions
-        self.act_dim = inner.act_dim
-
-    def reset(self, key):
-        return self.inner.reset(key)
-
-    def obs(self, state):
-        return self.inner.obs(state)
+        super().__init__(inner)
 
     def step(self, state, action):
         # round-trip the (state, action) through host memory
-        def host_step(state, action):
-            state = jax.tree_util.tree_map(np.asarray, state)
-            s, o, r, d = self.inner.step(state, jnp.asarray(action))
+        def host_step(inner_state, action):
+            inner_state = jax.tree_util.tree_map(np.asarray, inner_state)
+            s, o, r, d = self.inner.step(inner_state, jnp.asarray(action))
             return (jax.tree_util.tree_map(np.asarray, s), np.asarray(o),
                     np.float32(r), np.bool_(d))
 
-        shapes = jax.eval_shape(self.inner.step, state, action)
-        return io_callback(host_step, shapes, state, action)
+        shapes = jax.eval_shape(self.inner.step, state["inner"], action)
+        s, o, r, d = io_callback(host_step, shapes, state["inner"],
+                                 action)
+        return {"inner": s, "wrap": state["wrap"]}, o, r, d

@@ -1,8 +1,19 @@
-"""Pendulum-v1 dynamics in pure jnp (continuous torque)."""
+"""Pendulum-v1 dynamics in pure jnp (continuous torque).
+
+Mass/length/gravity live in the scenario pytree; `pendulum-rand` draws
+a fresh variant per episode (domain randomization). Torque and speed
+limits stay static — they define the action-space bounds and obs
+normalization published in the spec.
+"""
 import jax
 import jax.numpy as jnp
 
 from repro.envs.api import Env
+from repro.envs.registry import register
+from repro.envs.spec import EnvSpec, box
+
+# per-episode randomization bounds for the `pendulum-rand` family
+RAND_RANGES = {"m": (0.7, 1.3), "l": (0.7, 1.3), "g": (8.0, 12.0)}
 
 
 def _angle_normalize(x):
@@ -10,10 +21,6 @@ def _angle_normalize(x):
 
 
 class Pendulum(Env):
-    obs_dim = 3
-    n_actions = 0
-    act_dim = 1
-
     max_speed = 8.0
     max_torque = 2.0
     dt = 0.05
@@ -22,7 +29,18 @@ class Pendulum(Env):
     l = 1.0
     max_steps = 200
 
-    def reset(self, key):
+    @property
+    def spec(self):
+        return EnvSpec("pendulum",
+                       observation=box((3,), low=-1.0, high=1.0),
+                       action=box((1,), low=-self.max_torque,
+                                  high=self.max_torque),
+                       episode_len=self.max_steps)
+
+    def default_scenario(self):
+        return {"g": self.g, "m": self.m, "l": self.l}
+
+    def reset_scenario(self, key, scn):
         k1, k2 = jax.random.split(key)
         th = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
         thdot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
@@ -33,14 +51,22 @@ class Pendulum(Env):
                           state["thdot"] / self.max_speed])
 
     def step(self, state, action):
-        u = jnp.clip(action.reshape(()), -self.max_torque, self.max_torque)
+        scn = state["scn"]
+        u = jnp.clip(action.reshape(()), -self.max_torque,
+                     self.max_torque)
         th, thdot = state["th"], state["thdot"]
         cost = (_angle_normalize(th) ** 2 + 0.1 * thdot ** 2
                 + 0.001 * u ** 2)
-        thdot = thdot + (3 * self.g / (2 * self.l) * jnp.sin(th)
-                         + 3.0 / (self.m * self.l ** 2) * u) * self.dt
+        thdot = thdot + (3 * scn["g"] / (2 * scn["l"]) * jnp.sin(th)
+                         + 3.0 / (scn["m"] * scn["l"] ** 2) * u) * self.dt
         thdot = jnp.clip(thdot, -self.max_speed, self.max_speed)
         th = th + thdot * self.dt
         t = state["t"] + 1
-        s = {"th": th, "thdot": thdot, "t": t}
+        s = {"th": th, "thdot": thdot, "t": t, "scn": scn}
         return s, self.obs(s), -cost, t >= self.max_steps
+
+
+register("pendulum", Pendulum)
+register("pendulum-rand",
+         lambda ranges=None, **kw: Pendulum(
+             ranges=dict(RAND_RANGES, **(ranges or {})), **kw))

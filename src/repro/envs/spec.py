@@ -1,0 +1,114 @@
+"""EnvSpec: typed observation/action spaces for the env substrate.
+
+The spec is the env-side mirror of the agent seam (repro.core.agent):
+everything that used to be read off `obs_dim`/`n_actions`/`act_dim`
+class attributes — policy construction, rollout action scaling, DQN
+replay templates — is derived from one immutable `EnvSpec` instead, so
+new envs (and wrapped/scenario variants) carry their own contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Space:
+    """A (possibly bounded) array space.
+
+    `n > 0` marks a discrete space with `n` categories (shape is then the
+    shape of the integer action array, usually `()`); `n == 0` marks a
+    continuous box with `low`/`high` bounds (None = unbounded).
+    """
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    low: float = None
+    high: float = None
+    n: int = 0
+
+    @property
+    def discrete(self) -> bool:
+        return self.n > 0
+
+    @property
+    def size(self) -> int:
+        """Number of scalar entries (flattened width)."""
+        return int(math.prod(self.shape)) if self.shape else 1
+
+    # -- bounds helpers (continuous only) ------------------------------
+    @property
+    def midpoint(self) -> float:
+        lo = -1.0 if self.low is None else self.low
+        hi = 1.0 if self.high is None else self.high
+        return 0.5 * (lo + hi)
+
+    @property
+    def half_range(self) -> float:
+        lo = -1.0 if self.low is None else self.low
+        hi = 1.0 if self.high is None else self.high
+        return 0.5 * (hi - lo)
+
+    def sample(self, key):
+        """A uniform random element (conformance tests / exploration)."""
+        if self.discrete:
+            return jax.random.randint(key, self.shape, 0, self.n)
+        lo = -1.0 if self.low is None else self.low
+        hi = 1.0 if self.high is None else self.high
+        return jax.random.uniform(key, self.shape, self.dtype, lo, hi)
+
+    def contains(self, x) -> bool:
+        """Host-side containment check (conformance tests)."""
+        x = jnp.asarray(x)
+        if x.shape[-len(self.shape):] != self.shape and self.shape:
+            return False
+        if self.discrete:
+            return bool(jnp.all((x >= 0) & (x < self.n)))
+        ok = jnp.isfinite(x)
+        if self.low is not None:
+            ok = ok & (x >= self.low - 1e-5)
+        if self.high is not None:
+            ok = ok & (x <= self.high + 1e-5)
+        return bool(jnp.all(ok))
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """The immutable contract between an environment and its consumers.
+
+    `episode_len` is the env's internal step cap (0 = none); wrappers
+    like TimeLimit publish a tightened spec.
+    """
+    name: str
+    observation: Space
+    action: Space
+    episode_len: int = 0
+
+    # -- the attributes the seed API exposed, derived ------------------
+    @property
+    def obs_dim(self) -> int:
+        return self.observation.size
+
+    @property
+    def n_actions(self) -> int:
+        return self.action.n
+
+    @property
+    def act_dim(self) -> int:
+        return 1 if self.action.discrete else self.action.size
+
+    def replace(self, **kw) -> "EnvSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def discrete(n: int, shape: Tuple[int, ...] = ()) -> Space:
+    """Discrete action/observation space with `n` categories."""
+    return Space(shape=shape, dtype=jnp.int32, n=n)
+
+
+def box(shape, low=None, high=None, dtype=jnp.float32) -> Space:
+    """Continuous box space."""
+    return Space(shape=tuple(shape), dtype=dtype, low=low, high=high)

@@ -1,0 +1,176 @@
+"""Pure-functional env wrappers (survey §4.2: the composable simulation
+substrate).
+
+Wrapper state lives *inside the env-state pytree* under `state["wrap"]`
+(the wrapped env's state nests under `state["inner"]`), so a wrapped env
+is still a pure `reset`/`step` over jnp pytrees — everything stays
+jit/vmap/scan-fusable and rides through `shard_map` worker meshes
+untouched. Wrappers compose by nesting.
+
+`autoreset_merge` / `wrap_merge` control what survives an episode
+boundary: TimeLimit's step counter resets with the episode, while
+ObsNormalize's running mean/var deliberately persists (`wrap_merge`
+keeps the stepped state), which is what makes per-env online obs
+normalization work under batched autoreset.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.api import Env
+from repro.envs.spec import EnvSpec
+
+
+class Wrapper(Env):
+    """Base wrapper: state = {"inner": inner_state, "wrap": own_state}.
+
+    Subclasses override any of `wrap_init` (own state from the inner
+    reset state), `obs`, `step`, `wrap_merge` (autoreset persistence)
+    and `spec`.
+    """
+
+    def __init__(self, inner: Env):
+        self.inner = inner
+
+    @property
+    def spec(self) -> EnvSpec:
+        return self.inner.spec
+
+    # -- wrapper-state hooks -------------------------------------------
+    def wrap_init(self, inner_state) -> dict:
+        return {}
+
+    def wrap_merge(self, fresh, new, sel):
+        """Merge own state at episode boundaries (default: reset it)."""
+        return jax.tree_util.tree_map(sel, fresh, new)
+
+    # -- Env protocol --------------------------------------------------
+    def reset(self, key):
+        s = self.inner.reset(key)
+        return {"inner": s, "wrap": self.wrap_init(s)}
+
+    def obs(self, state):
+        return self.inner.obs(state["inner"])
+
+    def step(self, state, action):
+        s, o, r, d = self.inner.step(state["inner"], action)
+        return {"inner": s, "wrap": state["wrap"]}, o, r, d
+
+    def autoreset_merge(self, fresh, new_state, sel):
+        return {"inner": self.inner.autoreset_merge(
+                    fresh["inner"], new_state["inner"], sel),
+                "wrap": self.wrap_merge(fresh["wrap"], new_state["wrap"],
+                                        sel)}
+
+
+class TimeLimit(Wrapper):
+    """Truncate episodes at `max_steps` (own counter — works on any env,
+    including ones whose internal cap is longer or absent)."""
+
+    def __init__(self, inner: Env, max_steps: int):
+        super().__init__(inner)
+        self.max_steps = max_steps
+
+    @property
+    def spec(self):
+        inner = self.inner.spec
+        cap = (min(inner.episode_len, self.max_steps)
+               if inner.episode_len else self.max_steps)
+        return inner.replace(episode_len=cap)
+
+    def wrap_init(self, inner_state):
+        return {"t": jnp.zeros((), jnp.int32)}
+
+    def step(self, state, action):
+        s, o, r, d = self.inner.step(state["inner"], action)
+        t = state["wrap"]["t"] + 1
+        return {"inner": s, "wrap": {"t": t}}, o, r, d | (t >=
+                                                          self.max_steps)
+
+
+class ObsNormalize(Wrapper):
+    """Online per-env observation normalization (Welford running
+    mean/var carried in wrapper state; persists across autoresets)."""
+
+    def __init__(self, inner: Env, eps: float = 1e-4, clip: float = 10.0):
+        super().__init__(inner)
+        self.eps = eps
+        self.clip = clip
+
+    @property
+    def spec(self):
+        inner = self.inner.spec
+        return inner.replace(observation=dataclasses.replace(
+            inner.observation, low=-self.clip, high=self.clip))
+
+    def wrap_init(self, inner_state):
+        o0 = self.inner.obs(inner_state)
+        return {"count": jnp.ones((), jnp.float32),
+                "mean": o0.astype(jnp.float32),
+                "m2": jnp.zeros_like(o0, jnp.float32)}
+
+    def wrap_merge(self, fresh, new, sel):
+        return new  # running statistics survive episode boundaries
+
+    def _normalize(self, stats, o):
+        var = stats["m2"] / jnp.maximum(stats["count"] - 1.0, 1.0)
+        return jnp.clip((o - stats["mean"])
+                        / jnp.sqrt(var + self.eps),
+                        -self.clip, self.clip)
+
+    def obs(self, state):
+        return self._normalize(state["wrap"],
+                               self.inner.obs(state["inner"]))
+
+    def step(self, state, action):
+        s, o, r, d = self.inner.step(state["inner"], action)
+        st = state["wrap"]
+        count = st["count"] + 1.0
+        delta = o - st["mean"]
+        mean = st["mean"] + delta / count
+        m2 = st["m2"] + delta * (o - mean)
+        stats = {"count": count, "mean": mean, "m2": m2}
+        return {"inner": s, "wrap": stats}, self._normalize(stats, o), r, d
+
+
+class RewardScale(Wrapper):
+    """Multiply rewards by a constant (stateless)."""
+
+    def __init__(self, inner: Env, scale: float):
+        super().__init__(inner)
+        self.scale = scale
+
+    def step(self, state, action):
+        s, o, r, d = self.inner.step(state["inner"], action)
+        return {"inner": s, "wrap": state["wrap"]}, o, r * self.scale, d
+
+
+class ActionRepeat(Wrapper):
+    """Repeat each action `repeat` times, summing rewards; once the
+    episode ends mid-repeat the remaining sub-steps are masked out so
+    the terminal observation/state freeze (frame-skip, stateless)."""
+
+    def __init__(self, inner: Env, repeat: int):
+        super().__init__(inner)
+        assert repeat >= 1
+        self.repeat = repeat
+
+    def step(self, state, action):
+        s, o, r, d = self.inner.step(state["inner"], action)
+
+        def sub(carry, _):
+            s, o, r, d = carry
+            ns, no, nr, nd = self.inner.step(s, action)
+            keep = d  # episode already over: freeze state/obs, no reward
+            s = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(keep, a, b), s, ns)
+            o = jnp.where(keep, o, no)
+            r = r + jnp.where(keep, 0.0, nr)
+            return (s, o, r, d | nd), None
+
+        (s, o, r, d), _ = jax.lax.scan(sub, (s, o, r, d), None,
+                                       length=self.repeat - 1)
+        return {"inner": s, "wrap": state["wrap"]}, o, r, d

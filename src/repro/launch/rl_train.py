@@ -7,6 +7,10 @@ Every axis of the survey's taxonomy is one orthogonal flag, resolved by
 the unified Agent/Trainer API (repro.core.agent / repro.core.trainer):
 
   --algo      a3c | dqn | impala | ppo    (Agent registry)
+  --env       any registered env name     (env registry, `envs.make` —
+                                           incl. scenario families like
+                                           cartpole-rand and wrapped
+                                           variants like pendulum-norm)
   --topology  ps | allreduce | gossip     (§3, Fig. 3 — gradient/param
                                            exchange over the worker mesh)
   --sync      bsp | asp | ssp             (§6, Fig. 6 — policy-lag
@@ -32,7 +36,9 @@ import time
 # static mirrors of the library tuples so the parser builds without
 # importing jax (XLA_FLAGS must be set first); cross-checked in main()
 ALGOS = ("a3c", "dqn", "impala", "ppo")
-ENV_NAMES = ("cartpole", "pendulum", "gridworld")
+ENV_NAMES = ("cartpole", "cartpole-rand", "cartpole-repeat", "gridworld",
+             "gridworld-rand", "pendulum", "pendulum-norm",
+             "pendulum-rand")
 TOPOLOGY_CHOICES = ("allreduce", "ps", "gossip")
 SYNC_CHOICES = ("bsp", "asp", "ssp")
 
@@ -43,7 +49,11 @@ def build_parser():
         description="Unified distributed-DRL launcher (survey taxonomy "
                     "as orthogonal flags).")
     ap.add_argument("--algo", default="impala", choices=ALGOS)
-    ap.add_argument("--env", default="cartpole", choices=ENV_NAMES)
+    ap.add_argument("--env", default="cartpole", metavar="ENV",
+                    help="registered environment, validated against the "
+                         "repro.envs registry (built-ins: "
+                         + ", ".join(ENV_NAMES) + "; third-party "
+                         "`envs.register` entries work too)")
     ap.add_argument("--iters", type=int, default=60)
     ap.add_argument("--superstep", type=int, default=10,
                     help="iterations fused per jitted dispatch")
@@ -75,21 +85,24 @@ def main(argv=None):
                 f"{flags} --xla_force_host_platform_device_count="
                 f"{args.n_workers}").strip()
 
+    import repro.envs as envs
     from repro.core import agent as agent_api
     from repro.core.sync import MECHANISMS
     from repro.core.topology import TOPOLOGIES
     from repro.core.trainer import Trainer, TrainerConfig
-    from repro.envs import CartPole, GridWorld, Pendulum
 
-    envs = {"cartpole": CartPole, "pendulum": Pendulum,
-            "gridworld": GridWorld}
     # the CLI tuples are static so the parser stays jax-free; fail loudly
-    # if they ever drift from the library
+    # if they ever drift from the library registries
     assert set(TOPOLOGY_CHOICES) == set(TOPOLOGIES)
     assert set(SYNC_CHOICES) == set(MECHANISMS)
+    # built-in list may lag third-party registrations, never the reverse
+    assert set(ENV_NAMES) <= set(envs.available()), envs.available()
     if args.algo not in agent_api.available():
         ap.error(f"--algo {args.algo} not registered; available: "
                  f"{agent_api.available()}")
+    if args.env not in envs.available():
+        ap.error(f"--env {args.env} not registered; available: "
+                 f"{envs.available()}")
 
     algo_kwargs = {}
     if args.algo == "impala":
@@ -101,7 +114,7 @@ def main(argv=None):
         policy_lag=args.policy_lag, max_delay=args.max_delay,
         staleness_bound=args.staleness_bound, seed=args.seed,
         log_every=args.log_every, algo_kwargs=algo_kwargs)
-    env = envs[args.env]()
+    env = envs.make(args.env)
     t0 = time.time()
     _, history = Trainer(env, cfg).fit(fused=not args.unfused)
     print(json.dumps({

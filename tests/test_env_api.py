@@ -1,0 +1,289 @@
+"""Env-substrate conformance suite (Environment API v2).
+
+Every REGISTERED env (base, scenario family, wrapped variant) and every
+wrapper combo must satisfy the same contract: spec/obs agreement,
+jit+vmap-able reset/step, autoreset surfacing the pre-reset terminal
+observation, scenario batching, and one fused Trainer superstep with no
+Trainer changes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.envs as envs
+from repro.envs import (ActionRepeat, CartPole, EnvSpec, GridWorld,
+                        ObsNormalize, Pendulum, RewardScale, TimeLimit,
+                        box)
+
+B = 8
+
+WRAPPERS = {
+    "timelimit": lambda e: TimeLimit(e, 5),
+    "obsnorm": lambda e: ObsNormalize(e),
+    "rewscale": lambda e: RewardScale(e, 0.5),
+    "repeat": lambda e: ActionRepeat(e, 2),
+    "stack": lambda e: ObsNormalize(TimeLimit(RewardScale(e, 0.5), 5)),
+}
+BASES = {"cartpole": CartPole, "pendulum": Pendulum,
+         "gridworld": GridWorld}
+
+
+def _batch_actions(env, key, n):
+    return jax.vmap(env.spec.action.sample)(jax.random.split(key, n))
+
+
+def _conformance(env, key):
+    """The shared contract checked for every env × wrapper combo."""
+    spec = env.spec
+    assert isinstance(spec, EnvSpec)
+    assert spec.action.discrete == (spec.n_actions > 0)
+
+    # reset/obs under jit+vmap, shapes/dtypes agree with the spec
+    state = jax.jit(lambda k: env.reset_batch(k, B))(key)
+    obs = jax.jit(jax.vmap(env.obs))(state)
+    assert obs.shape == (B,) + spec.observation.shape
+    assert obs.dtype == spec.observation.dtype
+    assert np.all(np.isfinite(obs))
+
+    # step under jit+vmap
+    a = _batch_actions(env, key, B)
+    s2, o2, r, d = jax.jit(jax.vmap(env.step))(state, a)
+    assert o2.shape == obs.shape and o2.dtype == spec.observation.dtype
+    assert r.shape == (B,) and d.shape == (B,) and d.dtype == jnp.bool_
+    assert np.all(np.isfinite(o2)) and np.all(np.isfinite(r))
+
+    # autoreset invariant: the returned obs is the PRE-reset obs that
+    # `step` emitted — bit-identical to a plain step_batch — never the
+    # fresh-reset obs
+    s3, o3, r3, d3 = jax.jit(env.step_autoreset)(state, a, key)
+    np.testing.assert_array_equal(o3, o2)
+    np.testing.assert_array_equal(r3, r)
+    np.testing.assert_array_equal(d3, d)
+    # and the merged state is live: another step works
+    a2 = _batch_actions(env, jax.random.fold_in(key, 1), B)
+    env.step_autoreset(s3, a2, jax.random.fold_in(key, 2))
+
+
+@pytest.mark.parametrize("name", envs.available())
+def test_registered_env_conformance(name, rng):
+    _conformance(envs.make(name), rng)
+
+
+@pytest.mark.parametrize("wrapper", sorted(WRAPPERS))
+@pytest.mark.parametrize("base", sorted(BASES))
+def test_wrapped_env_conformance(base, wrapper, rng):
+    _conformance(WRAPPERS[wrapper](BASES[base]()), rng)
+
+
+# --------------------------------------------------------------- registry
+def test_registry_contains_seed_scenario_and_wrapped_envs():
+    names = set(envs.available())
+    assert {"cartpole", "pendulum", "gridworld"} <= names
+    assert {"cartpole-rand", "pendulum-rand", "gridworld-rand"} <= names
+    assert {"pendulum-norm", "cartpole-repeat"} <= names
+
+
+def test_make_unknown_env_raises():
+    with pytest.raises(KeyError, match="unknown environment"):
+        envs.make("nope")
+
+
+def test_make_forwards_kwargs(rng):
+    env = envs.make("gridworld", n=4, max_steps=7)
+    assert env.spec.episode_len == 7
+    state = env.reset(rng)
+    assert int(state["scn"]["n"]) == 4
+
+
+# ------------------------------------------------- autoreset boundary fix
+def test_autoreset_surfaces_terminal_obs_pinned(rng):
+    """Regression (seed bug): step_autoreset discarded the terminal
+    observation. With a 1-step TimeLimit every step is a boundary: the
+    returned obs must be the physics successor of the PRE-reset state,
+    and the merged state must already be a fresh episode."""
+    env = TimeLimit(CartPole(), 1)
+    state = env.reset_batch(rng, B)
+    a = _batch_actions(env, rng, B)
+    _, terminal_obs, _, done = jax.vmap(env.step)(state, a)
+    new_state, obs, _, d = env.step_autoreset(state, a, rng)
+    assert bool(jnp.all(d))                      # every env hit the limit
+    np.testing.assert_array_equal(obs, terminal_obs)
+    # the state actually reset: fresh counters, and the obs of the new
+    # episode differs from the terminal one
+    np.testing.assert_array_equal(np.asarray(new_state["wrap"]["t"]),
+                                  np.zeros(B, np.int32))
+    fresh_obs = jax.vmap(env.obs)(new_state)
+    assert not np.allclose(fresh_obs, obs)
+
+
+def test_rollout_next_obs_is_true_successor(rng):
+    """Through the rollout engine: next_obs[t] == obs[t+1] at non-done
+    steps, and at done steps it is the terminal obs of the OLD episode
+    (not the fresh-reset obs recorded at t+1)."""
+    from repro.core.networks import MLPPolicy
+    from repro.core.rollout import rollout
+    env = TimeLimit(CartPole(), 3)
+    pol = MLPPolicy.for_spec(env.spec, hidden=(8,))
+    params = pol.init(rng)
+    state = env.reset_batch(rng, 4)
+    traj, _ = rollout(pol, params, env, rng, state, 9)
+    nxt, obs, done = (np.asarray(traj[k])
+                      for k in ("next_obs", "obs", "done"))
+    cont = ~done[:-1]
+    np.testing.assert_allclose(nxt[:-1][cont], obs[1:][cont], rtol=1e-6)
+    assert done.any()
+    # boundary rows: successor recorded pre-reset, so it differs from
+    # the fresh obs the next row starts from
+    b_nxt, b_fresh = nxt[:-1][done[:-1]], obs[1:][done[:-1]]
+    assert not np.allclose(b_nxt, b_fresh)
+
+
+def test_obsnorm_stats_survive_autoreset(rng):
+    """ObsNormalize's running statistics must NOT reset at episode
+    boundaries (wrap_merge keeps the stepped state)."""
+    env = ObsNormalize(TimeLimit(Pendulum(), 2))
+    state = env.reset_batch(rng, 4)
+    for i in range(6):
+        a = _batch_actions(env, jax.random.fold_in(rng, i), 4)
+        state, _, _, d = env.step_autoreset(state, a,
+                                            jax.random.fold_in(rng, i))
+    # 6 steps (with boundaries every 2) on top of the init count of 1
+    np.testing.assert_array_equal(np.asarray(state["wrap"]["count"]),
+                                  np.full(4, 7.0, np.float32))
+    # ...while the TimeLimit counter below it did reset
+    assert int(jnp.max(state["inner"]["wrap"]["t"])) <= 2
+
+
+# --------------------------------------------------------- scenario API
+@pytest.mark.parametrize("name,field", [("cartpole-rand", "masspole"),
+                                        ("pendulum-rand", "m"),
+                                        ("gridworld-rand", "n")])
+def test_scenario_batch_is_diverse(name, field, rng):
+    """One reset_batch draws a DISTRIBUTION of scenario variants."""
+    env = envs.make(name)
+    state = env.reset_batch(rng, 16)
+    values = np.asarray(state["scn"][field])
+    assert values.shape[0] == 16
+    assert len(np.unique(values)) > 1
+
+
+def test_gridworld_rand_goal_inside_grid(rng):
+    env = envs.make("gridworld-rand")
+    state = env.reset_batch(rng, 32)
+    n = np.asarray(state["scn"]["n"])
+    goal = np.asarray(state["scn"]["goal"])
+    assert (goal >= 0).all() and (goal < n[:, None]).all()
+    assert (n >= 4).all() and (n <= 8).all()
+
+
+def test_gridworld_size_range_keeps_default_goal_reachable(rng):
+    """Randomizing only the grid size must clamp the (n-1, n-1) default
+    goal into the sampled grid instead of leaving it unreachable."""
+    env = GridWorld(n=8, ranges={"n": (4, 6)})
+    state = env.reset_batch(rng, 32)
+    n = np.asarray(state["scn"]["n"])
+    goal = np.asarray(state["scn"]["goal"])
+    assert (n <= 6).all()
+    assert (goal < n[:, None]).all()
+
+
+def test_obsnorm_spec_publishes_normalized_bounds():
+    """ObsNormalize rescales observations, so it must publish its own
+    clip bounds instead of inheriting the inner env's."""
+    env = envs.make("pendulum-norm")
+    obs_space = env.spec.observation
+    assert obs_space.low == -10.0 and obs_space.high == 10.0
+    assert Pendulum().spec.observation.high == 1.0  # inner untouched
+
+
+def test_scenario_override_and_validation(rng):
+    env = CartPole(scenario={"masspole": 0.3})
+    state = env.reset(rng)
+    assert float(state["scn"]["masspole"]) == pytest.approx(0.3)
+    with pytest.raises(KeyError, match="unknown scenario field"):
+        CartPole(scenario={"bogus": 1.0})
+    with pytest.raises(KeyError, match="unknown scenario range"):
+        Pendulum(ranges={"bogus": (0.0, 1.0)})
+
+
+def test_scenario_dynamics_actually_differ(rng):
+    """Same state+action under two scenarios -> different physics."""
+    heavy = CartPole(scenario={"masspole": 1.0}).reset(rng)
+    light = CartPole(scenario={"masspole": 0.01}).reset(rng)
+    light["s"] = heavy["s"]  # identical kinematic state
+    _, o_heavy, _, _ = CartPole().step(heavy, jnp.int32(1))
+    _, o_light, _, _ = CartPole().step(light, jnp.int32(1))
+    assert not np.allclose(o_heavy, o_light)
+
+
+# ------------------------------------------- spec-driven action scaling
+def test_episode_return_reads_action_bounds_from_spec(rng):
+    """Regression (seed bug): episode_return hard-coded Pendulum's
+    max_torque (tanh * 2.0). A saturated policy on a ±0.5 box must
+    produce actions at +0.5, so 4 steps of reward == action sum to 2.0
+    (the old code would have produced 8.0)."""
+    from repro.core.networks import MLPPolicy
+    from repro.core.rollout import episode_return
+
+    class _BoundsProbe:
+        spec = EnvSpec("probe", observation=box((1,)),
+                       action=box((1,), low=-0.5, high=0.5),
+                       episode_len=4)
+
+        def reset(self, key):
+            return {"t": jnp.zeros((), jnp.int32)}
+
+        def obs(self, state):
+            return jnp.zeros((1,))
+
+        def step(self, state, action):
+            t = state["t"] + 1
+            return ({"t": t}, jnp.zeros((1,)), action.reshape(())[None][0],
+                    t >= 4)
+
+    env = _BoundsProbe()
+    pol = MLPPolicy.for_spec(env.spec, hidden=(4,))
+    params = pol.init(rng)
+    params["pi"]["b"] = jnp.full_like(params["pi"]["b"], 10.0)  # saturate
+    total = float(episode_return(pol, params, env, rng, max_steps=4))
+    assert total == pytest.approx(4 * 0.5, abs=1e-2)
+
+
+def test_for_spec_policy_respects_pendulum_bounds(rng):
+    from repro.core.networks import MLPPolicy
+    env = Pendulum()
+    pol = MLPPolicy.for_spec(env.spec, hidden=(8,))
+    assert pol.act_scale == pytest.approx(env.max_torque)
+    a, logp = pol.sample(pol.init(rng), jnp.zeros((16, 3)), rng)
+    assert np.all(np.abs(np.asarray(a)) <= env.max_torque + 1e-5)
+    assert np.all(np.isfinite(np.asarray(logp)))
+
+
+# ------------------------------------- Trainer integration (acceptance)
+@pytest.mark.parametrize("name", envs.available())
+def test_trainer_one_superstep_every_registered_env(name):
+    """Acceptance: every registered env — scenario families and wrapped
+    variants included — trains one fused superstep under the existing
+    Trainer with zero Trainer changes."""
+    from repro.core.trainer import Trainer, TrainerConfig
+    cfg = TrainerConfig(algo="impala", iters=2, superstep=2, n_envs=4,
+                        unroll=4, log_every=1, seed=0,
+                        algo_kwargs={"hidden": (8,)})
+    _, hist = Trainer(envs.make(name), cfg).fit()
+    assert len(hist) == 2
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_wrapped_rollout_stays_zero_copy(rng):
+    """The wrapper stack must not break the single-XLA-program property
+    (no host callbacks in the jaxpr)."""
+    from repro.core.networks import MLPPolicy
+    from repro.core.rollout import rollout
+    env = ObsNormalize(TimeLimit(RewardScale(CartPole(), 0.5), 6))
+    pol = MLPPolicy.for_spec(env.spec, hidden=(8,))
+    params = pol.init(rng)
+    state = env.reset_batch(rng, 4)
+    jaxpr = jax.make_jaxpr(
+        lambda p, k, s: rollout(pol, p, env, k, s, 8))(params, rng, state)
+    assert "callback" not in str(jaxpr), "env must not round-trip host"

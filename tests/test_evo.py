@@ -42,10 +42,12 @@ def test_es_gradient_estimator_unbiased_direction():
 
 
 class _PointMass:
-    """Smooth continuous-control env for deterministic ES testing."""
-    obs_dim = 2
-    n_actions = 0
-    act_dim = 2
+    """Smooth continuous-control env for deterministic ES testing —
+    also exercises the duck-typed env contract: any object with a spec
+    and pure reset/obs/step works with the rollout/fitness engine."""
+    from repro.envs import EnvSpec, box
+    spec = EnvSpec("point-mass", observation=box((2,)),
+                   action=box((2,), low=-2.0, high=2.0), episode_len=30)
     discrete = False
 
     def reset(self, key):
@@ -66,7 +68,7 @@ def test_es_improves_point_mass():
     from repro.core.networks import MLPPolicy
     from repro.core.evo import ES
     env = _PointMass()
-    pol = MLPPolicy(2, 0, 2, hidden=(8,))
+    pol = MLPPolicy.for_spec(env.spec, hidden=(8,))
     es = ES(pol, env, pop_size=32, sigma=0.2, lr=0.1, max_steps=30)
     theta = es.init(jax.random.PRNGKey(1))
     step = jax.jit(es.step)
@@ -120,7 +122,7 @@ def test_erl_injection_runs():
     from repro.core.evo import ERL
     from repro.optim import adamw
     env = Pendulum()
-    pol = MLPPolicy(env.obs_dim, 0, env.act_dim, hidden=(8,))
+    pol = MLPPolicy.for_spec(env.spec, hidden=(8,))
     erl = ERL(pol, env, pop_size=4, max_steps=30, inject_every=1)
     state, replay = erl.init(jax.random.PRNGKey(0))
     opt = adamw(1e-3)

@@ -135,12 +135,14 @@ def test_checkpoint_through_training(tmp_path, rng):
     np.testing.assert_allclose(p1["w"], p2["w"], atol=1e-7)
 
 
-# ----------------------------------------------------------------- envs
+# ------------------------------------------------------------------ envs
+# (the full env-API conformance suite lives in tests/test_env_api.py;
+# these pin the seed-era compat surface: derived obs_dim/n_actions/
+# act_dim attributes still drive a rollout)
 @pytest.mark.parametrize("env_name", ["cartpole", "pendulum", "gridworld"])
 def test_env_step_autoreset(env_name, rng):
-    from repro.envs import CartPole, Pendulum, GridWorld
-    env = {"cartpole": CartPole, "pendulum": Pendulum,
-           "gridworld": GridWorld}[env_name]()
+    import repro.envs as envs
+    env = envs.make(env_name)
     n = 8
     state = env.reset_batch(rng, n)
     for i in range(5):
@@ -159,10 +161,10 @@ def test_env_step_autoreset(env_name, rng):
 def test_env_rollout_fully_jitted(rng):
     """Zero-copy property: the whole rollout compiles to ONE XLA program
     (no host callbacks in the jaxpr)."""
-    from repro.envs import CartPole
+    import repro.envs as envs
     from repro.core.networks import MLPPolicy
     from repro.core.rollout import rollout
-    env = CartPole()
+    env = envs.make("cartpole")
     pol = MLPPolicy(env.obs_dim, env.n_actions, hidden=(8,))
     params = pol.init(rng)
     state = env.reset_batch(rng, 4)
