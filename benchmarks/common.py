@@ -1,7 +1,21 @@
-"""Benchmark helpers: timing + CSV emission."""
+"""Benchmark helpers: timing + CSV emission + machine-readable JSON.
+
+Every benchmark's `run()` returns `(name, us_per_call, derived)` rows;
+`write_bench_json` serializes them into the repo-root `BENCH_*.json`
+schema (`repro-bench/v1`) that tracks the perf trajectory across PRs:
+
+    {"schema": "repro-bench/v1", "benchmark": <module>,
+     "backend": "cpu"|"tpu"|..., "meta": {...},
+     "rows": [{"name", "us_per_call", "derived"}, ...]}
+"""
+import json
+import os
 import time
 
 import jax
+
+SCHEMA = "repro-bench/v1"
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def time_fn(fn, *args, warmup=2, iters=10):
@@ -20,3 +34,20 @@ def emit(rows):
     for name, us, derived in rows:
         print(f"{name},{us if us is not None else ''},{derived}")
     return rows
+
+
+def write_bench_json(benchmark, rows, **meta):
+    """Write repo-root BENCH_<benchmark>.json in the repro-bench/v1
+    schema; returns the path."""
+    doc = {"schema": SCHEMA, "benchmark": benchmark,
+           "backend": jax.default_backend(), "meta": meta,
+           "rows": [{"name": name,
+                     "us_per_call": (round(us, 2)
+                                     if us is not None else None),
+                     "derived": derived}
+                    for name, us, derived in rows]}
+    path = os.path.join(REPO_ROOT, f"BENCH_{benchmark}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return path

@@ -1,0 +1,182 @@
+"""Pallas-fused learner hot path benchmark (tentpole PR 3).
+
+Three measurements, written machine-readably to repo-root
+BENCH_hotpath.json (repro-bench/v1 schema):
+
+  1. advantages: the reverse-scan kernel (GAE + n-step returns) vs the
+     lax.scan ref oracle;
+  2. replay_sample: the fused Gumbel-top-k prioritized-sampling kernel
+     vs its jnp ref AND the legacy categorical+gather path it replaces;
+  3. zero-copy supersteps: the DQN Trainer superstep (replay_capacity
+     >= 20k) with donate_argnums on vs off — walltime per superstep and
+     peak live bytes from XLA's compiled memory analysis (argument +
+     output + temp − donated-alias).
+
+Off-TPU the Pallas kernels execute in interpret mode (meta records it)
+— their timings track the trajectory, not peak speed; the donation and
+legacy-vs-fused-ref comparisons are real on every backend.
+
+Usage: python benchmarks/hotpath.py [--quick]
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _setup_path():
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), ".."))
+
+
+if __package__ is None or __package__ == "":
+    _setup_path()
+
+from benchmarks.common import emit, time_fn, write_bench_json  # noqa: E402
+from repro.kernels.common import interpret_mode  # noqa: E402
+
+
+def _advantage_rows(quick):
+    from repro.kernels.advantages import ops as aops
+    from repro.kernels.advantages.ref import gae_ref, nstep_return_ref
+    T, B = (16, 64) if quick else (64, 512)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    rew = jax.random.normal(ks[0], (T, B))
+    val = jax.random.normal(ks[1], (T, B))
+    dones = jax.random.uniform(ks[2], (T, B)) < 0.05
+    boot = jax.random.normal(ks[3], (B,))
+    shape = f"T={T};B={B}"
+    interp = f"interpret={interpret_mode()}"
+    rows = []
+    for name, fn in (("gae_ref", jax.jit(gae_ref)),
+                     ("gae_kernel", jax.jit(aops.gae)),
+                     ("nstep_ref", jax.jit(nstep_return_ref)),
+                     ("nstep_kernel", jax.jit(aops.nstep_return))):
+        args = ((rew, val, dones, boot) if "gae" in name
+                else (rew, dones, boot))
+        us = time_fn(fn, *args, warmup=2, iters=3 if quick else 10)
+        tag = shape + (";" + interp if "kernel" in name else "")
+        rows.append((f"advantages/{name}", us, tag))
+    return rows
+
+
+def _replay_rows(quick):
+    from repro.core.replay import PrioritizedReplay
+    from repro.core.replay_sample import fused_prioritized_sample
+    from repro.kernels.replay_sample.ops import prioritized_sample
+    C, n = 20000, 64
+    key = jax.random.PRNGKey(1)
+    prio = jnp.abs(jax.random.normal(key, (C,))) + 0.01
+    example = {"obs": jnp.zeros((4,)), "a": jnp.zeros((), jnp.int32)}
+    iters = 3 if quick else 10
+
+    def fill(rp):
+        st = rp.init(example)
+        st = rp.add_batch(st, jax.tree_util.tree_map(
+            lambda a: jnp.zeros((C,) + a.shape, a.dtype), example))
+        return dict(st, prio=prio)
+
+    legacy = PrioritizedReplay(C)
+    st = fill(legacy)
+    f_legacy = jax.jit(lambda s, k: legacy.sample(s, k, n)[1:])
+    us_legacy = time_fn(f_legacy, st, key, warmup=2, iters=iters)
+
+    # the production fused path, apples-to-apples with the legacy row:
+    # includes the per-call (C,) Gumbel generation
+    fused = PrioritizedReplay(C, fused=True)
+    f_fused = jax.jit(lambda s, k: fused.sample(s, k, n)[1:])
+    us_fused = time_fn(f_fused, st, key, warmup=2, iters=iters)
+
+    gum = jax.random.gumbel(key, (C,))
+    f_ref = jax.jit(lambda p, s, g: fused_prioritized_sample(
+        p, s, g, n, use_kernel=False))
+    us_ref = time_fn(f_ref, prio, st["size"], gum, warmup=2, iters=iters)
+    f_kern = jax.jit(lambda p, s, g: prioritized_sample(p, s, g, n))
+    us_kern = time_fn(f_kern, prio, st["size"], gum, warmup=2,
+                      iters=iters)
+    shape = f"C={C};n={n}"
+    return [
+        ("replay_sample/legacy_categorical", us_legacy,
+         shape + ";with_replacement;full_sample"),
+        ("replay_sample/fused_sample", us_fused,
+         f"{shape};gumbel_topk;full_sample;"
+         f"speedup_vs_legacy=x{us_legacy / us_fused:.1f}"),
+        ("replay_sample/fused_ref", us_ref,
+         shape + ";gumbel_topk;bare_seam"),
+        ("replay_sample/fused_kernel", us_kern,
+         f"{shape};gumbel_topk;bare_seam;interpret={interpret_mode()}"),
+    ]
+
+
+def _bytes(trainer, k, donate):
+    ma = trainer.lower(k, donate=donate).compile().memory_analysis()
+    alias = ma.alias_size_in_bytes
+    live = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - alias)
+    return live, alias
+
+
+def _superstep_rows(quick):
+    import repro.envs as envs
+    from repro.core.trainer import Trainer, TrainerConfig
+    K = 4 if quick else 8
+    reps = 2 if quick else 6
+    cap = 20000
+    env = envs.make("cartpole")
+    results = {}
+    for donate in (False, True):
+        cfg = TrainerConfig(algo="dqn", iters=K, superstep=K, n_envs=8,
+                            unroll=8, donate=donate, log_every=K,
+                            algo_kwargs={"replay_capacity": cap,
+                                         "warmup": 1, "hidden": (32,)})
+        tr = Trainer(env, cfg)
+        state, sim, delays = tr._init_all()
+        step = tr._superstep(K)
+        its = jnp.arange(K, dtype=jnp.int32)
+        state, sim, m = step(state, sim, its, delays[:K])  # compile
+        jax.block_until_ready(m)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            state, sim, m = step(state, sim, its, delays[:K])
+        jax.block_until_ready(m)
+        wall = (time.perf_counter() - t0) / reps
+        live, alias = _bytes(tr, K, donate)
+        results[donate] = (wall, live, alias)
+    (w0, l0, _), (w1, l1, a1) = results[False], results[True]
+    return [
+        ("superstep/dqn_donate_off", w0 / K * 1e6,
+         f"wall_s={w0:.4f};K={K};replay_capacity={cap};live_bytes={l0}"),
+        ("superstep/dqn_donate_on", w1 / K * 1e6,
+         f"wall_s={w1:.4f};K={K};replay_capacity={cap};live_bytes={l1}"
+         f";alias_bytes={a1}"),
+        ("superstep/donation_walltime_speedup", None,
+         f"x{w0 / w1:.2f}"),
+        ("superstep/donation_bytes_saved", None,
+         f"bytes={l0 - l1};pct={100.0 * (l0 - l1) / max(l0, 1):.1f}"),
+    ]
+
+
+def run(quick=False):
+    rows = (_advantage_rows(quick) + _replay_rows(quick)
+            + _superstep_rows(quick))
+    emit(rows)
+    path = write_bench_json("hotpath", rows, quick=quick,
+                            interpret_kernels=interpret_mode())
+    print(f"# wrote {path}", file=sys.stderr)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes/reps (CI smoke)")
+    run(quick=ap.parse_args().quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Advantage estimation (GAE / n-step returns) — public API.
+
+Mirrors core/vtrace.py: dispatches to the Pallas reverse-scan kernel on
+TPU and the lax.scan reference elsewhere; both share the oracle in
+kernels/advantages/ref.py. PPO (`algos/ppo.py`) and A3C
+(`algos/a3c.py`) compute their targets through this seam instead of
+private inline scans, so every learner's serial T-recursion runs
+through one kernel family.
+"""
+from repro.kernels.common import interpret_mode
+from repro.kernels.advantages.ref import (discounted_return_ref, gae_ref,
+                                          nstep_return_ref)
+
+
+def discounted_return(base, coef, init, use_kernel=False):
+    """out_t = base_t + coef_t * out_{t+1}; time-major (T, B)."""
+    if use_kernel and not interpret_mode():
+        from repro.kernels.advantages.ops import discounted_return as k
+        return k(base, coef, init)
+    return discounted_return_ref(base, coef, init)
+
+
+def gae(rewards, values, dones, bootstrap, gamma=0.99, lam=0.95,
+        use_kernel=False):
+    """Generalized advantage estimation, time-major (T, B).
+    Returns (advantages, returns)."""
+    if use_kernel and not interpret_mode():
+        from repro.kernels.advantages.ops import gae as gae_k
+        return gae_k(rewards, values, dones, bootstrap, gamma, lam)
+    return gae_ref(rewards, values, dones, bootstrap, gamma, lam)
+
+
+def nstep_return(rewards, dones, bootstrap, gamma=0.99, use_kernel=False):
+    """Discounted n-step returns, time-major (T, B) -> (T, B)."""
+    if use_kernel and not interpret_mode():
+        from repro.kernels.advantages.ops import nstep_return as k
+        return k(rewards, dones, bootstrap, gamma)
+    return nstep_return_ref(rewards, dones, bootstrap, gamma)

@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.advantages import nstep_return
 from repro.core.agent import PolicyGradientAgent, register
 from repro.core.networks import MLPPolicy
 from repro.optim import adamw, clip_by_global_norm
@@ -34,15 +35,10 @@ class A3C:
         logp, v, ent = self.policy.log_prob(params, obs_flat, act_flat)
         logp, v, ent = (a.reshape(T, B) for a in (logp, v, ent))
         _, boot = self.policy.apply(params, bootstrap_obs)
-        discounts = self.gamma * (1.0 - traj["done"].astype(jnp.float32))
-
-        def disc_ret(acc, xs):
-            r, d = xs
-            acc = r + d * acc
-            return acc, acc
-
-        _, ret = jax.lax.scan(disc_ret, boot,
-                              (traj["reward"], discounts), reverse=True)
+        # n-step targets through the core.advantages kernel seam
+        # (Pallas reverse-scan on TPU, lax.scan ref elsewhere)
+        ret = nstep_return(traj["reward"], traj["done"], boot,
+                           self.gamma, use_kernel=True)
         adv = jax.lax.stop_gradient(ret - v)
         return (-jnp.mean(logp * adv)
                 + self.vf_coef * jnp.mean(jnp.square(v - ret))

@@ -25,10 +25,12 @@ class DQN:
     double: bool = True
     prioritized: bool = True
     replay_capacity: int = 10000
+    fused_sampling: bool = False  # Gumbel-top-k kernel path (replay.py)
 
     @property
     def replay(self):
-        return (PrioritizedReplay(self.replay_capacity)
+        return (PrioritizedReplay(self.replay_capacity,
+                                  fused=self.fused_sampling)
                 if self.prioritized
                 else UniformReplay(self.replay_capacity))
 
@@ -129,6 +131,20 @@ class _QPolicy:
         logp = jnp.take_along_axis(jax.nn.log_softmax(q),
                                    a[..., None], -1)[..., 0]
         return a, logp
+
+    def sample_value(self, params, obs, key):
+        """ε-greedy draw + log-prob + value from ONE q evaluation (the
+        sample/apply pair evaluated the net three times); same key
+        discipline as DQN.act, so actions are bitwise unchanged."""
+        q = DQN.q_values(params["net"], obs)
+        greedy = jnp.argmax(q, axis=-1)
+        rand = jax.random.randint(key, greedy.shape, 0,
+                                  self.dqn.n_actions)
+        take_rand = jax.random.uniform(key, greedy.shape) < params["eps"]
+        a = jnp.where(take_rand, rand, greedy)
+        logp = jnp.take_along_axis(jax.nn.log_softmax(q),
+                                   a[..., None], -1)[..., 0]
+        return a, logp, q.max(axis=-1)
 
 
 class DQNAgent(Agent):

@@ -8,25 +8,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.advantages import gae
 from repro.core.agent import PolicyGradientAgent, TrainState, register
 from repro.core.networks import MLPPolicy
 from repro.optim import adamw, clip_by_global_norm
 
-
-def gae(rewards, values, dones, bootstrap, gamma=0.99, lam=0.95):
-    """Time-major (T,B). Returns (advantages, returns)."""
-    values_tp1 = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
-    nonterm = 1.0 - dones.astype(jnp.float32)
-    deltas = rewards + gamma * nonterm * values_tp1 - values
-
-    def body(acc, xs):
-        delta, nt = xs
-        acc = delta + gamma * lam * nt * acc
-        return acc, acc
-
-    _, adv = jax.lax.scan(body, jnp.zeros_like(bootstrap),
-                          (deltas, nonterm), reverse=True)
-    return adv, adv + values
+__all__ = ["gae", "PPO", "PPOAgent"]  # gae re-exported for back-compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,10 +40,12 @@ class PPO:
         return pg + self.vf_coef * vf - self.ent_coef * jnp.mean(ent)
 
     def make_batch(self, params, traj, last_obs):
-        """traj: time-major rollout dict. Computes GAE and flattens."""
+        """traj: time-major rollout dict. Computes GAE (through the
+        core.advantages kernel seam — Pallas on TPU, scan ref
+        elsewhere) and flattens."""
         _, boot = self.policy.apply(params, last_obs)
         adv, ret = gae(traj["reward"], traj["value"], traj["done"], boot,
-                       self.gamma, self.lam)
+                       self.gamma, self.lam, use_kernel=True)
         flat = lambda a: a.reshape((-1,) + a.shape[2:])
         return {"obs": flat(traj["obs"]), "action": flat(traj["action"]),
                 "logp": flat(traj["logp"]), "adv": flat(adv),

@@ -63,9 +63,8 @@ class MLPPolicy:
         return pi, v
 
     # -- distributions -------------------------------------------------
-    def sample(self, params, obs, key):
-        """-> (action, log_prob)."""
-        pi, _ = self.apply(params, obs)
+    def _dist_sample(self, params, pi, key):
+        """Draw (action, log_prob) from the head output `pi`."""
         if self.discrete:
             a = jax.random.categorical(key, pi)
             logp = jax.nn.log_softmax(pi)[
@@ -78,6 +77,19 @@ class MLPPolicy:
         logp = (-0.5 * ((a - pi) / std) ** 2
                 - jnp.log(std) - 0.5 * jnp.log(2 * jnp.pi)).sum(-1)
         return jnp.tanh(a) * self.act_scale + self.act_mid, logp
+
+    def sample(self, params, obs, key):
+        """-> (action, log_prob)."""
+        pi, _ = self.apply(params, obs)
+        return self._dist_sample(params, pi, key)
+
+    def sample_value(self, params, obs, key):
+        """-> (action, log_prob, value) from ONE forward pass — the
+        rollout engine's hot path (rollout.py runs one trunk evaluation
+        per env step instead of sample + apply)."""
+        pi, v = self.apply(params, obs)
+        a, logp = self._dist_sample(params, pi, key)
+        return a, logp, v
 
     def log_prob(self, params, obs, action):
         pi, v = self.apply(params, obs)
@@ -140,5 +152,7 @@ class TrunkPolicy:
             pi, v = pi[0], v[0]
         return pi, v
 
+    _dist_sample = MLPPolicy._dist_sample
     sample = MLPPolicy.sample
+    sample_value = MLPPolicy.sample_value
     log_prob = MLPPolicy.log_prob

@@ -1,0 +1,19 @@
+"""Fused prioritized replay sampling — public API.
+
+Mirrors core/vtrace.py: dispatches to the Pallas Gumbel-top-k kernel on
+TPU and the jnp reference elsewhere; both share the oracle in
+kernels/replay_sample/ref.py. `PrioritizedReplay(fused=True)` samples
+through this seam.
+"""
+from repro.kernels.common import interpret_mode
+from repro.kernels.replay_sample.ref import prioritized_sample_ref
+
+
+def fused_prioritized_sample(prio, size, gumbel, n, alpha=0.6, beta=0.4,
+                             eps=1e-6, use_kernel=False):
+    """prio (C,), size scalar, gumbel (C,) ~ Gumbel(0,1), n draws
+    WITHOUT replacement ∝ p_i^α. Returns (idx (n,) i32, w (n,) f32)."""
+    if use_kernel and not interpret_mode():
+        from repro.kernels.replay_sample.ops import prioritized_sample
+        return prioritized_sample(prio, size, gumbel, n, alpha, beta, eps)
+    return prioritized_sample_ref(prio, size, gumbel, n, alpha, beta, eps)

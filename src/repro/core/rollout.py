@@ -21,13 +21,24 @@ def rollout(policy, params, env, key, env_state, T):
     steps it is the pre-autoreset terminal obs (see
     Env.step_autoreset), so replay/bootstrap consumers never see the
     fresh-reset obs at an episode boundary.
+
+    Policies exposing `sample_value` (one forward for action, log-prob
+    AND value) get exactly one network evaluation per env step; the
+    legacy sample + apply pair is kept only as a fallback for policies
+    without it.
     """
+    sample_value = getattr(policy, "sample_value", None)
+    if sample_value is None:
+        def sample_value(params, obs, key):   # two-forward fallback
+            action, logp = policy.sample(params, obs, key)
+            _, value = policy.apply(params, obs)
+            return action, logp, value
+
     def step(carry, key_t):
         env_state = carry
         obs = jax.vmap(env.obs)(env_state)
         ka, kr = jax.random.split(key_t)
-        action, logp = policy.sample(params, obs, ka)
-        _, value = policy.apply(params, obs)
+        action, logp, value = sample_value(params, obs, ka)
         env_state, next_obs, reward, done = env.step_autoreset(
             env_state, action, kr)
         return env_state, {"obs": obs, "action": action, "logp": logp,

@@ -57,6 +57,7 @@ class TrainerConfig:
     staleness_bound: int = 1   # ssp bound on extra staleness
     seed: int = 0
     log_every: int = 10
+    donate: bool = True        # zero-copy supersteps: donate state/sim
     algo_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
@@ -155,9 +156,19 @@ class Trainer:
         return (state, sim), metrics
 
     # ---- superstep: k fused iterations in one program ----------------
-    def _superstep(self, k: int):
-        if k in self._step_cache:
-            return self._step_cache[k]
+    def _superstep(self, k: int, donate: bool = None):
+        """Jitted k-iteration program. With `donate` (cfg.donate by
+        default) the `state`/`sim` argument buffers are donated to
+        their same-shaped outputs, so the carried pytrees — DQN's
+        capacity×transition replay store, the actor-param ring, env
+        state — update in place instead of being copied once per
+        dispatch (zero-copy superstep; measured in
+        benchmarks/hotpath.py)."""
+        donate = self.cfg.donate if donate is None else donate
+        cache_key = (k, donate)
+        if cache_key in self._step_cache:
+            return self._step_cache[cache_key]
+        donate_argnums = (0, 1) if donate else ()
 
         def body(state, sim, its, delays):
             (state, sim), metrics = jax.lax.scan(
@@ -165,7 +176,7 @@ class Trainer:
             return state, sim, metrics
 
         if self.mesh is None:
-            fn = jax.jit(body)
+            fn = jax.jit(body, donate_argnums=donate_argnums)
         else:
             from jax.experimental.shard_map import shard_map
 
@@ -181,8 +192,9 @@ class Trainer:
             fn = jax.jit(shard_map(
                 worker, mesh=self.mesh,
                 in_specs=(w, w, P(), P(None, AXIS)),
-                out_specs=(w, w, P()), check_rep=False))
-        self._step_cache[k] = fn
+                out_specs=(w, w, P()), check_rep=False),
+                donate_argnums=donate_argnums)
+        self._step_cache[cache_key] = fn
         return fn
 
     # ---- state/schedule construction ---------------------------------
@@ -211,13 +223,15 @@ class Trainer:
             delays = delays[:, 0]
         return state, sim, delays
 
-    def lower(self, k: int = None):
+    def lower(self, k: int = None, donate: bool = None):
         """Lower (without running) one superstep — lets benchmarks
-        inspect the collective schedule (HLO) per topology."""
+        inspect the collective schedule (HLO) per topology and the
+        donation plan (compile().memory_analysis())."""
         k = self.cfg.superstep if k is None else k
         state, sim, delays = self._init_all()
         its = jnp.arange(k, dtype=jnp.int32)
-        return self._superstep(k).lower(state, sim, its, delays[:k])
+        return self._superstep(k, donate).lower(state, sim, its,
+                                                delays[:k])
 
     # ---- the driver --------------------------------------------------
     def fit(self, fused: bool = True):

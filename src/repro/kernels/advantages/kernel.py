@@ -1,0 +1,51 @@
+"""Pallas-TPU reverse-scan kernel for GAE / n-step returns.
+
+One kernel serves every advantage estimator reducible to the linear
+recurrence `out_t = base_t + coef_t * out_{t+1}` (see ref.py): the
+recursion is serial in T but embarrassingly parallel in batch, so the
+grid (nb,) tiles the batch across cores while the whole (T, bb) block
+sits in VMEM (same decomposition as kernels/vtrace). One fori_loop runs
+the recursion entirely in-register.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_mode, compiler_params
+
+
+def _kernel(base_ref, coef_ref, init_ref, out_ref, *, T):
+    base = base_ref[...]                                   # (T,bb)
+    coef = coef_ref[...]
+    init = init_ref[...]                                   # (1,bb)
+
+    def step(i, carry):
+        acc, out = carry
+        t = T - 1 - i
+        acc = base[t] + coef[t] * acc
+        out = out.at[t].set(acc)
+        return acc, out
+
+    _, out = jax.lax.fori_loop(0, T, step,
+                               (init[0], jnp.zeros_like(base)))
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("bb",))
+def discounted_return_tb(base, coef, init, bb=128):
+    """Inputs (T,B) f32 time-major, init (B,); B % bb == 0 (wrapper
+    pads). Returns out (T,B) with out_t = base_t + coef_t*out_{t+1}."""
+    T, B = base.shape
+    nb = B // bb
+    spec = pl.BlockSpec((T, bb), lambda ib: (0, ib))
+    return pl.pallas_call(
+        functools.partial(_kernel, T=T),
+        grid=(nb,),
+        in_specs=[spec, spec, pl.BlockSpec((1, bb), lambda ib: (0, ib))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((T, B), jnp.float32),
+        compiler_params=compiler_params(("parallel",)),
+        interpret=interpret_mode(),
+    )(base, coef, init[None])

@@ -1,0 +1,36 @@
+"""Jit'd wrappers: pad batch, call the Pallas reverse-scan kernel, and
+express GAE / n-step returns in terms of it (elementwise prologues fuse
+into the surrounding XLA program; the serial recursion runs in-kernel).
+"""
+import jax.numpy as jnp
+
+from repro.kernels.advantages.kernel import discounted_return_tb
+
+
+def discounted_return(base, coef, init, bb=128):
+    T, B = base.shape
+    bb = min(bb, B)
+    pad = (-B) % bb
+    if pad:
+        p2 = ((0, 0), (0, pad))
+        base, coef = (jnp.pad(a, p2) for a in (base, coef))
+        init = jnp.pad(init, ((0, pad),))
+    out = discounted_return_tb(base.astype(jnp.float32),
+                               coef.astype(jnp.float32),
+                               init.astype(jnp.float32), bb=bb)
+    return out[:, :B]
+
+
+def gae(rewards, values, dones, bootstrap, gamma=0.99, lam=0.95, bb=128):
+    """Time-major (T,B). Returns (advantages, returns)."""
+    values_tp1 = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
+    nonterm = 1.0 - dones.astype(jnp.float32)
+    deltas = rewards + gamma * nonterm * values_tp1 - values
+    adv = discounted_return(deltas, gamma * lam * nonterm,
+                            jnp.zeros_like(bootstrap), bb=bb)
+    return adv, adv + values
+
+
+def nstep_return(rewards, dones, bootstrap, gamma=0.99, bb=128):
+    discounts = gamma * (1.0 - dones.astype(jnp.float32))
+    return discounted_return(rewards, discounts, bootstrap, bb=bb)

@@ -1,0 +1,48 @@
+"""Reference advantage estimators via one shared reverse linear scan.
+
+GAE (Schulman et al. 2016) and n-step returns (A3C) are both instances
+of the first-order reverse recurrence
+
+    out_t = base_t + coef_t * out_{t+1},      out_T = init
+
+  * n-step return:  base = r_t,      coef = γ (1 − done_t),   init = V(s_T)
+  * GAE advantage:  base = δ_t,      coef = γ λ (1 − done_t), init = 0
+    with δ_t = r_t + γ (1 − done_t) V_{t+1} − V_t.
+
+These refs are bitwise-identical to the scans that previously lived
+inline in `algos/ppo.py` / `algos/a3c.py` (same op sequence, same
+constant folding) — the kernel in kernel.py is validated against them.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def discounted_return_ref(base, coef, init):
+    """Reverse scan of `out_t = base_t + coef_t * out_{t+1}`.
+
+    base/coef: (T, B) time-major; init: (B,) terminal carry.
+    Returns out (T, B)."""
+    def body(acc, xs):
+        b, c = xs
+        acc = b + c * acc
+        return acc, acc
+
+    _, out = jax.lax.scan(body, init, (base, coef), reverse=True)
+    return out
+
+
+def gae_ref(rewards, values, dones, bootstrap, gamma=0.99, lam=0.95):
+    """Time-major (T, B). Returns (advantages, returns)."""
+    values_tp1 = jnp.concatenate([values[1:], bootstrap[None]], axis=0)
+    nonterm = 1.0 - dones.astype(jnp.float32)
+    deltas = rewards + gamma * nonterm * values_tp1 - values
+    adv = discounted_return_ref(deltas, gamma * lam * nonterm,
+                                jnp.zeros_like(bootstrap))
+    return adv, adv + values
+
+
+def nstep_return_ref(rewards, dones, bootstrap, gamma=0.99):
+    """Discounted n-step returns R_t = r_t + γ(1−done_t) R_{t+1},
+    R_T = bootstrap. Time-major (T, B) -> (T, B)."""
+    discounts = gamma * (1.0 - dones.astype(jnp.float32))
+    return discounted_return_ref(rewards, discounts, bootstrap)

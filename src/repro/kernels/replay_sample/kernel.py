@@ -1,0 +1,83 @@
+"""Pallas-TPU fused prioritized-sampling kernel.
+
+priorities -> α-scaled log-weights -> Gumbel-top-k draw -> IS weights,
+all in one kernel invocation: the full (1, C) priority vector lives in
+VMEM (C = replay capacity; 1M slots ≈ 4 MiB) and never materializes a
+capacity-sized softmax — the partition function reduces to one scalar
+and only the n chosen logits are exponentiated for weights. The top-n
+draw is n rounds of argmax+mask over the in-VMEM scores (n·C VPU work,
+n ≲ 256), entirely in-register.
+
+With fewer filled slots than n (avoid it — the draw is no longer
+without-replacement), surplus positions repeat the top draw exactly as
+the ref oracle does: unfilled slots are never returned.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import interpret_mode, compiler_params
+
+_NEG = -3.4e38  # -inf stand-in: avoids inf-inf NaNs on the VPU
+
+
+def _kernel(prio_ref, gumbel_ref, size_ref, idx_ref, w_ref,
+            *, n, C, alpha, beta, eps):
+    size = size_ref[0, 0]
+    nvalid = jnp.maximum(size, 1)
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+    valid = col < nvalid
+    logits = jnp.where(valid, alpha * jnp.log(prio_ref[...] + eps), _NEG)
+    scores = jnp.where(valid, logits + gumbel_ref[...], _NEG)
+
+    def draw(i, carry):
+        scores, idxs, chosen = carry
+        j = jnp.argmax(scores).astype(jnp.int32)   # (1,C) flat == column
+        hit = col == j
+        idxs = idxs.at[0, i].set(j)
+        chosen = chosen.at[0, i].set(jnp.sum(jnp.where(hit, logits, 0.0)))
+        scores = jnp.where(hit, _NEG, scores)
+        return scores, idxs, chosen
+
+    _, idxs, chosen = jax.lax.fori_loop(
+        0, n, draw, (scores, jnp.zeros((1, n), jnp.int32),
+                     jnp.zeros((1, n), jnp.float32)))
+    # n > size fallback: the first `size` positions hold every filled
+    # slot (their scores dominate _NEG); surplus positions repeat the
+    # top draw — matches ref.py, never returns an unfilled slot
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    surplus = pos >= nvalid
+    idxs = jnp.where(surplus, idxs[0, 0], idxs)
+    chosen = jnp.where(surplus, chosen[0, 0], chosen)
+
+    m = jnp.max(jnp.where(valid, logits, _NEG))
+    Z = jnp.sum(jnp.where(valid, jnp.exp(logits - m), 0.0))
+    p = jnp.exp(chosen - m) / Z
+    w = (nvalid.astype(jnp.float32) * p + 1e-12) ** (-beta)
+    idx_ref[...] = idxs
+    w_ref[...] = w / jnp.maximum(jnp.max(w), 1e-12)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "alpha", "beta", "eps"))
+def prioritized_sample_c(prio, gumbel, size, n, alpha=0.6, beta=0.4,
+                         eps=1e-6):
+    """prio/gumbel (1,C) f32, size (1,1) int32. -> (idx (1,n) i32,
+    w (1,n) f32)."""
+    C = prio.shape[1]
+    kernel = functools.partial(_kernel, n=n, C=C, alpha=alpha, beta=beta,
+                               eps=eps)
+    spec = pl.BlockSpec((1, C), lambda: (0, 0))
+    out_spec = pl.BlockSpec((1, n), lambda: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[spec, spec, pl.BlockSpec((1, 1), lambda: (0, 0))],
+        out_specs=(out_spec, out_spec),
+        out_shape=(jax.ShapeDtypeStruct((1, n), jnp.int32),
+                   jax.ShapeDtypeStruct((1, n), jnp.float32)),
+        compiler_params=compiler_params(()),
+        interpret=interpret_mode(),
+    )(prio, gumbel, size)

@@ -1,0 +1,17 @@
+"""Jit'd wrapper: lift (C,) priorities into the fused Pallas
+prioritized-sampling kernel's (1, C) layout."""
+import jax.numpy as jnp
+
+from repro.kernels.replay_sample.kernel import prioritized_sample_c
+
+
+def prioritized_sample(prio, size, gumbel, n, alpha=0.6, beta=0.4,
+                       eps=1e-6):
+    """prio (C,) raw priorities, size scalar int32, gumbel (C,) standard
+    Gumbel noise. Returns (idx (n,) int32, w (n,) f32)."""
+    idx, w = prioritized_sample_c(
+        prio.astype(jnp.float32)[None],
+        gumbel.astype(jnp.float32)[None],
+        jnp.asarray(size, jnp.int32).reshape(1, 1),
+        n=n, alpha=float(alpha), beta=float(beta), eps=float(eps))
+    return idx[0], w[0]

@@ -1,0 +1,45 @@
+"""Reference fused prioritized sampling (Ape-X, survey §3.1).
+
+One pass from raw priorities to (indices, importance weights):
+
+    logits_i = α log(p_i + ε)            (masked to filled slots)
+    draw:      top-n of logits_i + g_i   (g_i ~ Gumbel(0,1) supplied by
+               the caller — Gumbel-top-k, i.e. sampling WITHOUT
+               replacement proportional to p_i^α)
+    weights:   w_j ∝ (N π_{idx_j})^{-β}, normalized to max 1, with
+               π gathered straight from the chosen logits — no
+               full-capacity softmax materialization.
+
+The Pallas kernel (kernel.py) computes the identical function; this
+oracle is the parity target. The Gumbel noise is an explicit input so
+kernel and ref are comparable draw-for-draw.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def prioritized_sample_ref(prio, size, gumbel, n, alpha=0.6, beta=0.4,
+                           eps=1e-6):
+    """prio (C,) raw priorities, size scalar int (filled slots), gumbel
+    (C,) standard Gumbel noise. Returns (idx (n,) int32, w (n,) f32).
+
+    Degenerate regime n > size (avoid it — the draw is no longer
+    without-replacement): top-k ranks all `size` filled slots first, so
+    the surplus positions repeat the top draw instead of ever touching
+    an unfilled slot; their weights are the top draw's real weight,
+    never a fabricated max-weight zero transition."""
+    C = prio.shape[0]
+    nvalid = jnp.maximum(size, 1)
+    valid = jnp.arange(C) < nvalid
+    logits = jnp.where(valid, alpha * jnp.log(prio + eps), -jnp.inf)
+    scores = jnp.where(valid, logits + gumbel, -jnp.inf)
+    _, idx = jax.lax.top_k(scores, n)
+    idx = jnp.where(jnp.arange(n) < nvalid, idx, idx[0]).astype(
+        jnp.int32)
+    # π_idx without materializing softmax(logits): gather the chosen
+    # logits, normalize by the (scalar) partition function.
+    m = jnp.max(logits)
+    Z = jnp.sum(jnp.where(valid, jnp.exp(logits - m), 0.0))
+    p = jnp.exp(logits[idx] - m) / Z
+    w = (nvalid * p + 1e-12) ** (-beta)
+    return idx, w / jnp.maximum(w.max(), 1e-12)

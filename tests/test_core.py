@@ -144,5 +144,118 @@ def test_replay_update_priorities(rng):
     assert float(st_["prio"][1]) == pytest.approx(3.0, abs=1e-4)
 
 
+def test_replay_ptr_wraparound_both_buffers(rng):
+    """Two partial adds that cross the ring boundary: ptr wraps, size
+    saturates, and the surviving items are exactly the newest ones."""
+    for rp in (UniformReplay(8), PrioritizedReplay(8)):
+        st_ = rp.init(_example())
+        mk = lambda lo, hi: {"x": jnp.zeros((hi - lo, 3)),
+                             "r": jnp.arange(lo, hi, dtype=jnp.float32)}
+        st_ = rp.add_batch(st_, mk(0, 5))
+        assert int(st_["ptr"]) == 5 and int(st_["size"]) == 5
+        st_ = rp.add_batch(st_, mk(5, 10))
+        assert int(st_["ptr"]) == 2 and int(st_["size"]) == 8
+        got = set(np.asarray(st_["store"]["r"]).tolist())
+        assert got == set(range(2, 10)), got
+
+
+def test_replay_add_batch_larger_than_capacity_is_deterministic():
+    """n > capacity used to rely on unspecified duplicate-scatter
+    ordering; now only the last `capacity` items are written (ring
+    semantics), and priorities ride along."""
+    rp = PrioritizedReplay(4)
+    st_ = rp.init(_example())
+    st_ = rp.add_batch(st_, {"x": jnp.zeros((10, 3)),
+                             "r": jnp.arange(10, dtype=jnp.float32)},
+                       priorities=jnp.arange(10, dtype=jnp.float32))
+    assert int(st_["ptr"]) == 10 % 4 and int(st_["size"]) == 4
+    r = np.asarray(st_["store"]["r"])
+    assert set(r.tolist()) == {6.0, 7.0, 8.0, 9.0}
+    # priority i rode with item i through the truncation
+    np.testing.assert_allclose(np.asarray(st_["prio"]), r)
+
+
+def test_replay_empty_buffer_sampling_documented_behavior(rng):
+    """Sampling from an EMPTY buffer is degenerate-but-defined: slot-0
+    zeros with finite weights, never NaN (see replay.py docstring)."""
+    urp = UniformReplay(8)
+    batch, idx = urp.sample(urp.init(_example()), rng, 4)
+    assert np.asarray(idx).tolist() == [0, 0, 0, 0]
+    np.testing.assert_allclose(batch["x"], 0.0)
+    # both paths: every draw lands on slot 0 (the only "valid" one;
+    # the fused path's surplus positions repeat the top draw)
+    for fused in (False, True):
+        prp = PrioritizedReplay(8, fused=fused)
+        batch, idx, w = prp.sample(prp.init(_example()), rng, 4)
+        assert np.asarray(idx).tolist() == [0, 0, 0, 0], (fused, idx)
+        np.testing.assert_allclose(batch["x"], 0.0)
+        assert bool(jnp.all(jnp.isfinite(w))), (fused, w)
+
+
+def test_prioritized_is_weight_normalization(rng):
+    """w ∝ (N p_i)^{-β} normalized to max 1; uniform priorities give
+    exactly w == 1 for every draw, on both sampling paths."""
+    for fused in (False, True):
+        rp = PrioritizedReplay(32, fused=fused)
+        st_ = rp.init(_example())
+        st_ = rp.add_batch(st_, {"x": jnp.zeros((16, 3)),
+                                 "r": jnp.zeros(16)},
+                           priorities=jnp.ones((16,)))
+        _, idx, w = rp.sample(st_, rng, 8)
+        assert bool(jnp.all(idx < 16)), fused
+        np.testing.assert_allclose(w, 1.0, atol=1e-5,
+                                   err_msg=f"fused={fused}")
+
+
+def test_priority_update_roundtrip_steers_sampling(rng):
+    """update_priorities -> sample round-trip: after reassigning all
+    mass to one slot, (α=1) sampling concentrates there — on the
+    legacy path and the fused Gumbel-top-k path alike."""
+    for fused in (False, True):
+        rp = PrioritizedReplay(64, alpha=1.0, fused=fused)
+        st_ = rp.init(_example())
+        st_ = rp.add_batch(st_, {"x": jnp.zeros((32, 3)),
+                                 "r": jnp.arange(32.0)})
+        st_ = rp.update_priorities(
+            st_, jnp.arange(32),
+            jnp.where(jnp.arange(32) == 11, 1e4, 1e-4))
+        hits = 0
+        for i in range(30):
+            _, idx, _ = rp.sample(st_, jax.random.fold_in(rng, i), 1)
+            hits += int(idx[0] == 11)
+        assert hits > 24, (fused, hits)
+
+
+def test_prioritized_legacy_weights_match_softmax_formula(rng):
+    """The softmax-free legacy path is BITWISE the old full-capacity
+    softmax materialization (gather commutes with the normalize)."""
+    rp = PrioritizedReplay(64)
+    st_ = rp.init(_example())
+    st_ = rp.add_batch(st_, {"x": jax.random.normal(rng, (20, 3)),
+                             "r": jnp.arange(20.0)})
+    _, idx, w = rp.sample(st_, rng, 16)
+    valid = jnp.arange(64) < st_["size"]
+    logits = jnp.where(valid, rp.alpha * jnp.log(st_["prio"] + rp.eps),
+                       -jnp.inf)
+    probs = jax.nn.softmax(logits)
+    w_old = (st_["size"] * probs[idx] + 1e-12) ** (-rp.beta)
+    w_old = w_old / jnp.maximum(w_old.max(), 1e-12)
+    assert np.array_equal(np.asarray(w), np.asarray(w_old))
+
+
+def test_prioritized_fused_prefers_high_priority(rng):
+    rp = PrioritizedReplay(64, alpha=1.0, fused=True)
+    st_ = rp.init(_example())
+    st_ = rp.add_batch(st_, {"x": jnp.zeros((32, 3)),
+                             "r": jnp.arange(32.0)},
+                       priorities=jnp.where(jnp.arange(32) == 7, 100.0,
+                                            0.001))
+    hits = 0
+    for i in range(50):
+        _, idx, _ = rp.sample(st_, jax.random.fold_in(rng, i), 1)
+        hits += int(idx[0] == 7)
+    assert hits > 40, f"high-priority item sampled only {hits}/50"
+
+
 # Learning-sanity integration tests live in tests/test_trainer.py (they
 # run through the unified Agent/Trainer API and need no hypothesis).

@@ -5,11 +5,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.advantages import ops as adv_ops
+from repro.kernels.advantages.ref import (discounted_return_ref, gae_ref,
+                                          nstep_return_ref)
 from repro.kernels.flash_attention.kernel import flash_attention_hsd
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gmm.ops import gmm
 from repro.kernels.gmm.ref import gmm_ref
+from repro.kernels.replay_sample.ops import prioritized_sample
+from repro.kernels.replay_sample.ref import prioritized_sample_ref
 from repro.kernels.vtrace.ops import vtrace as vtrace_k
 from repro.kernels.vtrace.ref import vtrace_ref
 from repro.kernels.wkv6.ops import wkv6
@@ -130,3 +135,108 @@ def test_vtrace_kernel_sweep(T, B, rng):
     vs2, a2 = vtrace_k(lr, disc, rew, val, boot)
     np.testing.assert_allclose(vs1, vs2, atol=1e-5, rtol=1e-5)
     np.testing.assert_allclose(a1, a2, atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------- advantages
+def _adv_inputs(T, B, rng):
+    ks = jax.random.split(rng, 4)
+    rew = jax.random.normal(ks[0], (T, B))
+    val = jax.random.normal(ks[1], (T, B))
+    dones = jax.random.uniform(ks[2], (T, B)) < 0.1
+    boot = jax.random.normal(ks[3], (B,))
+    return rew, val, dones, boot
+
+
+@pytest.mark.parametrize("T,B", [(37, 9), (64, 128), (128, 1)])
+def test_advantages_kernel_sweep(T, B, rng):
+    """The single reverse-scan kernel reproduces BOTH estimators built
+    on it (GAE and n-step returns) against the scan oracle, including
+    the non-multiple-of-bb padding path."""
+    rew, val, dones, boot = _adv_inputs(T, B, rng)
+    a1, r1 = gae_ref(rew, val, dones, boot, 0.99, 0.95)
+    a2, r2 = adv_ops.gae(rew, val, dones, boot, 0.99, 0.95)
+    np.testing.assert_allclose(a1, a2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(r1, r2, atol=1e-5, rtol=1e-5)
+    n1 = nstep_return_ref(rew, dones, boot, 0.99)
+    n2 = adv_ops.nstep_return(rew, dones, boot, 0.99)
+    np.testing.assert_allclose(n1, n2, atol=1e-5, rtol=1e-5)
+
+
+def test_advantages_generic_recurrence(rng):
+    T, B = 50, 40
+    ks = jax.random.split(rng, 3)
+    base = jax.random.normal(ks[0], (T, B))
+    coef = jax.random.uniform(ks[1], (T, B))
+    init = jax.random.normal(ks[2], (B,))
+    np.testing.assert_allclose(
+        discounted_return_ref(base, coef, init),
+        adv_ops.discounted_return(base, coef, init),
+        atol=1e-5, rtol=1e-5)
+
+
+def test_advantages_ref_pins_legacy_inline_scans(rng):
+    """The oracle is BITWISE the scans that used to live inline in
+    algos/ppo.py (GAE) and algos/a3c.py (n-step) — guards the
+    'numerically unchanged training' acceptance criterion."""
+    gamma, lam = 0.99, 0.95
+    rew, val, dones, boot = _adv_inputs(33, 7, rng)
+    values_tp1 = jnp.concatenate([val[1:], boot[None]], axis=0)
+    nonterm = 1.0 - dones.astype(jnp.float32)
+    deltas = rew + gamma * nonterm * values_tp1 - val
+
+    def show(acc, xs):
+        delta, nt = xs
+        acc = delta + gamma * lam * nt * acc
+        return acc, acc
+
+    _, adv_legacy = jax.lax.scan(show, jnp.zeros_like(boot),
+                                 (deltas, nonterm), reverse=True)
+    adv, ret = gae_ref(rew, val, dones, boot, gamma, lam)
+    assert np.array_equal(np.asarray(adv), np.asarray(adv_legacy))
+    assert np.array_equal(np.asarray(ret), np.asarray(adv_legacy + val))
+
+    disc = gamma * (1.0 - dones.astype(jnp.float32))
+
+    def nstep_body(acc, xs):
+        r, d = xs
+        acc = r + d * acc
+        return acc, acc
+
+    _, ret_legacy = jax.lax.scan(nstep_body, boot, (rew, disc),
+                                 reverse=True)
+    assert np.array_equal(
+        np.asarray(nstep_return_ref(rew, dones, boot, gamma)),
+        np.asarray(ret_legacy))
+
+
+# --------------------------------------------------------- replay_sample
+@pytest.mark.parametrize("C,size,n", [
+    (512, 300, 64),
+    (2048, 2048, 128),                 # full buffer
+    (256, 17, 16),                     # nearly-empty, n == size-1 range
+    (131, 100, 1),                     # odd capacity, single draw
+    (64, 10, 32),                      # degenerate n > size fallback
+])
+def test_replay_sample_kernel_matches_ref(C, size, n, rng):
+    ks = jax.random.split(rng, 2)
+    prio = jnp.abs(jax.random.normal(ks[0], (C,))) + 0.01
+    gumbel = jax.random.gumbel(ks[1], (C,))
+    i1, w1 = prioritized_sample_ref(prio, size, gumbel, n)
+    i2, w2 = prioritized_sample(prio, jnp.int32(size), gumbel, n)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(w1, w2, atol=1e-5, rtol=1e-5)
+    assert bool((i1 < size).all()), "never returns an unfilled slot"
+
+
+def test_replay_sample_without_replacement_and_valid(rng):
+    C, size, n = 512, 400, 64
+    ks = jax.random.split(rng, 2)
+    prio = jnp.abs(jax.random.normal(ks[0], (C,))) + 0.01
+    idx, w = prioritized_sample(
+        prio, jnp.int32(size), jax.random.gumbel(ks[1], (C,)), n)
+    idx = np.asarray(idx)
+    assert len(set(idx.tolist())) == n, "Gumbel-top-k: no replacement"
+    assert (idx < size).all(), "must never sample unfilled slots"
+    w = np.asarray(w)
+    assert ((w > 0) & (w <= 1.0 + 1e-6)).all() and w.max() == \
+        pytest.approx(1.0)
