@@ -1,15 +1,20 @@
 """Survey Fig. 3 / §3: centralized (PS) vs decentralized (all-reduce) vs
-gossip — now driven through the unified Trainer: an 8-worker IMPALA/
-CartPole superstep is lowered per topology and its HLO collective bytes
-compared, then trained to check all three converge. Spawned in a
-subprocess so this process keeps one device."""
+gossip — driven through the unified Trainer as 1-D DistPlans, plus one
+hierarchical 2-D plan (intra-host allreduce + inter-host gossip on a
+(hosts=2, workers=4) mesh) showing what the Distribution Plan API buys:
+an 8-worker IMPALA/CartPole superstep is lowered per plan and its HLO
+collective bytes compared, then trained to check all of them converge.
+Spawned in a subprocess so this process keeps one device.
+
+Always writes repo-root BENCH_topologies.json (repro-bench/v1) so the
+distribution perf trajectory records across PRs."""
 import json
 import os
 import subprocess
 import sys
 import textwrap
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -17,20 +22,29 @@ _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
+    from repro.core.distribution import DistPlan
     from repro.core.trainer import Trainer, TrainerConfig
     from repro.launch.hlo_analysis import collective_bytes
     import repro.envs as envs
     env = envs.make("cartpole")
+    plans = {
+        "allreduce": DistPlan.flat(8, collective="allreduce"),
+        "ps": DistPlan.flat(8, collective="ps"),
+        "gossip": DistPlan.flat(8, collective="gossip"),
+        "hier2x4": DistPlan.grid(2, 4, inter="gossip",
+                                 intra="allreduce"),
+    }
     out = {}
-    for topo in ("allreduce", "ps", "gossip"):
+    for name, plan in plans.items():
         cfg = TrainerConfig(algo="impala", iters=30, superstep=10,
-                            n_envs=32, unroll=16, n_workers=8,
-                            topology=topo, log_every=10,
+                            n_envs=32, unroll=16, plan=plan,
+                            log_every=10,
                             algo_kwargs={"hidden": (64, 64)})
         tr = Trainer(env, cfg)
         coll = collective_bytes(tr.lower().compile().as_text())
         _, hist = tr.fit()
-        out[topo] = {"collective_bytes": coll["total"],
+        out[name] = {"plan": plan.describe(),
+                     "collective_bytes": coll["total"],
                      "counts": coll["counts"],
                      "final_loss": hist[-1]["loss"],
                      "final_return": hist[-1]["episode_return"]}
@@ -43,16 +57,23 @@ def run():
     env.pop("XLA_FLAGS", None)
     r = subprocess.run([sys.executable, "-c", _SCRIPT],
                        capture_output=True, text=True, env=env,
-                       timeout=900)
+                       timeout=1200)
     if r.returncode != 0:
-        return emit([("fig3/error", None, r.stderr[-300:])])
+        rows = emit([("fig3/error", None, r.stderr[-300:])])
+        # still record the failure so BENCH_topologies.json never shows
+        # a stale previous run as the current revision
+        write_bench_json("topologies", rows)
+        return rows
     res = json.loads([ln for ln in r.stdout.splitlines()
                       if ln.startswith("RESULT ")][-1][7:])
     rows = []
-    for topo, d in res.items():
-        rows.append((f"fig3/{topo}", None,
+    for name, d in res.items():
+        rows.append((f"fig3/{name}", None,
+                     f"plan={d['plan']};"
                      f"collective_bytes_per_superstep="
                      f"{d['collective_bytes']};"
                      f"final_loss={d['final_loss']:.4f};"
                      f"final_return={d['final_return']:.1f}"))
-    return emit(rows)
+    emit(rows)
+    write_bench_json("topologies", rows)
+    return rows

@@ -1,14 +1,19 @@
 """Survey Fig. 6 + §6.2: synchronization mechanisms — convergence under
 staleness (BSP/SSP/ASP) and the barrier-cost throughput model.
 
-Now driven end-to-end through the unified Trainer: each mechanism is a
-policy-lag schedule into the actor ring of an *uncorrected* actor-critic
-(A3C) on CartPole — the survey's qualitative claim is that staleness
-degrades convergence (BSP >= SSP >= ASP) while the analytic cost model
-orders wall-time the other way (ASP <= SSP <= BSP)."""
+Driven end-to-end through the unified Trainer: each mechanism is a 1-D
+DistPlan whose sync discipline renders as a policy-lag schedule into the
+actor ring of an *uncorrected* actor-critic (A3C) on CartPole — the
+survey's qualitative claim is that staleness degrades convergence
+(BSP >= SSP >= ASP) while the analytic cost model orders wall-time the
+other way (ASP <= SSP <= BSP).
+
+Always writes repo-root BENCH_sync.json (repro-bench/v1) so the
+distribution perf trajectory records across PRs."""
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
+from repro.core.distribution import DistPlan
 from repro.core.sync import SyncConfig, sync_cost_model
 from repro.core.trainer import Trainer, TrainerConfig
 import repro.envs as envs
@@ -18,17 +23,21 @@ def run():
     env = envs.make("cartpole")
     rows = []
     for mech in ("bsp", "ssp", "asp"):
+        plan = DistPlan.flat(1, sync=mech, max_delay=8,
+                             staleness_bound=2)
         cfg = TrainerConfig(algo="a3c", iters=60, superstep=10,
-                            n_envs=16, unroll=16, sync=mech,
-                            max_delay=8, staleness_bound=2,
+                            n_envs=16, unroll=16, plan=plan,
                             seed=0, log_every=60)
         _, hist = Trainer(env, cfg).fit()
         scfg = SyncConfig(mech, 8, max_delay=8, staleness_bound=2)
         wall = float(sync_cost_model(scfg, 1.0, 0.3, 60,
                                      jax.random.PRNGKey(4)))
         rows.append((f"fig6/{mech}", None,
+                     f"plan={plan.describe()};"
                      f"final_return={hist[-1]['episode_return']:.1f};"
                      f"final_loss={hist[-1]['loss']:.4f};"
                      f"model_wall_s={wall:.1f};"
                      f"ring_size={cfg.ring_size}"))
-    return emit(rows)
+    emit(rows)
+    write_bench_json("sync", rows)
+    return rows

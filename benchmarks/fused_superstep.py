@@ -10,6 +10,7 @@ steady-state."""
 import time
 
 from benchmarks.common import emit
+from repro.core.distribution import DistPlan
 from repro.core.trainer import Trainer, TrainerConfig
 import repro.envs as envs
 
@@ -24,7 +25,7 @@ def _timed_fit(trainer, fused):
 def run():
     env = envs.make("cartpole")
     cfg = TrainerConfig(algo="impala", iters=96, superstep=16, n_envs=16,
-                        unroll=16, log_every=96)
+                        unroll=16, plan=DistPlan.flat(), log_every=96)
     trainer = Trainer(env, cfg)
     fused_s = _timed_fit(trainer, fused=True)
     unfused_s = _timed_fit(trainer, fused=False)

@@ -27,13 +27,23 @@ print("serve:", serve("gemma3-1b", reduced=True, batch=2,
 
 # ---- 3. Distributed DRL: IMPALA through the unified Trainer ----------------
 import repro.envs as envs
+from repro.core.distribution import DistPlan
 from repro.core.trainer import Trainer, TrainerConfig
 
 env = envs.make("cartpole")          # name registry, parallel to agent.make
+# The distribution is declared, not hard-coded: a DistPlan names the
+# mesh axes (1-D here; try DistPlan.grid(2, 2) on 4 devices), the
+# per-axis collective + sync discipline, and an elastic actor-shard
+# schedule — env shards cycle 16 -> 32 between supersteps while the
+# agent only ever sees `traj`.
+plan = DistPlan.flat(1, collective="allreduce", sync="bsp",
+                     actors=(16, 32))
 cfg = TrainerConfig(algo="impala", iters=40, superstep=10, n_envs=16,
-                    unroll=16, policy_lag=2, log_every=10)
-_, hist = Trainer(env, cfg).fit()
-print("impala:", hist[-1])
+                    unroll=16, plan=plan, policy_lag=2, log_every=10)
+trainer = Trainer(env, cfg)
+_, hist = trainer.fit()
+print("impala:", hist[-1], "plan:", plan.describe(),
+      "actor_shards:", trainer.actor_shards)
 
 # ---- 4. Evolution strategies (survey §7) -----------------------------------
 from repro.core.networks import MLPPolicy

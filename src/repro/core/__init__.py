@@ -1,15 +1,17 @@
 """repro.core — the survey's taxonomy as a composable framework.
 
 Axes (each independently selectable through the unified Trainer):
-  topology:  ps | allreduce | gossip        (survey §3)
-  sync:      bsp | asp | ssp                (survey §6)
-  algo:      dqn | ppo | impala | a3c       (unified Agent registry)
-  evo:       es | ga | erl                  (survey §7, evolution training)
+  collective: ps | allreduce | gossip       (survey §3, per mesh axis)
+  sync:       bsp | asp | ssp               (survey §6, per mesh axis)
+  algo:       dqn | ppo | impala | a3c      (unified Agent registry)
+  evo:        es | ga | erl                 (survey §7, evolution training)
 
 All backprop algorithms train through one seam: `agent.make(name, env)`
 builds an Agent (init / actor_policy / learner_step over a TrainState
-pytree) and `trainer.Trainer` drives it — fused supersteps, shard_map
-worker meshes, topology-routed gradients, sync-scheduled policy lag.
+pytree) and `trainer.Trainer` drives it under a declarative
+`distribution.DistPlan` — fused supersteps, hierarchical shard_map
+meshes (e.g. hosts x workers), per-axis collective-routed gradients,
+per-axis sync-scheduled policy lag, elastic actor shards.
 """
 from repro.core.networks import MLPPolicy  # noqa: F401
 from repro.core.rollout import rollout  # noqa: F401
@@ -19,4 +21,5 @@ from repro.envs.cartpole import CartPole  # noqa: F401
 from repro.envs.pendulum import Pendulum  # noqa: F401
 from repro.envs.gridworld import GridWorld  # noqa: F401
 from repro.core.agent import Agent, TrainState  # noqa: F401
+from repro.core.distribution import AxisSpec, DistPlan  # noqa: F401
 from repro.core.trainer import Trainer, TrainerConfig  # noqa: F401

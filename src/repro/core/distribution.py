@@ -1,0 +1,276 @@
+"""Distribution Plan API — the declarative description of how training
+is spread over devices (survey §3 architectures x §6 synchronization,
+composed hierarchically).
+
+Real DRL systems compose *hierarchies* of parallelism — intra-node
+allreduce under inter-node parameter-server or gossip, with per-level
+sync disciplines (SRL separates the dataflow description from its
+execution; ElegantRL-Podracer makes actor counts a scheduling knob).
+A `DistPlan` is that description as a static pytree-of-config:
+
+  * a device mesh of named axes (`AxisSpec`), outermost first —
+    default 1-D ``(workers,)``, first-class 2-D ``(hosts, workers)``;
+  * a per-axis collective — ``allreduce`` / ``ps`` / ``gossip`` —
+    compiled into the Trainer's `grad_tx`/`param_tx` hooks. Consecutive
+    allreduce axes fuse into ONE collective over the axis-name tuple,
+    so a (1, N) or (2, N/2) nesting of pure allreduce lowers to the
+    same all-reduce over the same device group as the flat plan and
+    stays bitwise-identical (pinned in tests/test_trainer.py);
+  * a per-axis sync schedule — ``bsp``/``asp``/``ssp`` rendered as
+    policy-lag delays (repro.core.sync) which ADD across levels: a
+    device at mesh coordinates (i0, i1, ...) acts with params
+    ``sum_a delay_a[t, i_a]`` learner-updates old;
+  * an optional elastic ``actors=`` schedule: total env-shard counts
+    cycled per superstep dispatch. Agents only consume ``traj``, so
+    resharding between supersteps is invisible to them.
+
+The legacy single-axis path (`n_workers`/`topology`/`sync` flags) lowers
+onto `DistPlan.flat(...)` and stays bitwise-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sync import MECHANISMS, SyncConfig, make_delays
+from repro.core.topology import TOPOLOGIES, exchange_grads, gossip_mix
+
+_SYNC_EXTRA = {"bsp": lambda ax: 0,
+               "asp": lambda ax: ax.max_delay,
+               "ssp": lambda ax: min(ax.max_delay, ax.staleness_bound)}
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisSpec:
+    """One named mesh axis: its size, how gradients/params are exchanged
+    across it (§3), and how stale its members may act (§6)."""
+    name: str
+    size: int
+    collective: str = "allreduce"   # §3: allreduce | ps | gossip
+    sync: str = "bsp"               # §6: bsp | asp | ssp
+    max_delay: int = 4              # asp worst-case extra staleness
+    staleness_bound: int = 1        # ssp bound on extra staleness
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("axis name must be non-empty")
+        if self.size < 1:
+            raise ValueError(f"axis {self.name!r}: size {self.size} < 1")
+        if self.collective not in TOPOLOGIES:
+            raise ValueError(f"axis {self.name!r}: collective "
+                             f"{self.collective!r} not in {TOPOLOGIES}")
+        if self.sync not in MECHANISMS:
+            raise ValueError(f"axis {self.name!r}: sync {self.sync!r} "
+                             f"not in {MECHANISMS}")
+
+    @property
+    def ring_extra(self) -> int:
+        """Actor-ring depth this axis's sync discipline can reach into."""
+        return _SYNC_EXTRA[self.sync](self)
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    """Hierarchical distribution plan: mesh axes (outermost first) plus
+    an optional elastic actor-shard schedule. Static / hashable — safe
+    to close over in jitted code."""
+    axes: Tuple[AxisSpec, ...] = (AxisSpec("workers", 1),)
+    actors: Optional[Tuple[int, ...]] = None  # env shards per superstep
+
+    def __post_init__(self):
+        if not self.axes:
+            raise ValueError("DistPlan needs at least one mesh axis")
+        names = [a.name for a in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate mesh axis names: {names}")
+        if self.actors is not None:
+            if not self.actors:
+                raise ValueError("actors= schedule must be non-empty")
+            bad = [n for n in self.actors if n < 1]
+            if bad:
+                raise ValueError(f"actors= entries must be >= 1: {bad}")
+            object.__setattr__(self, "actors", tuple(self.actors))
+        object.__setattr__(self, "axes", tuple(self.axes))
+
+    # ---- constructors -------------------------------------------------
+    @classmethod
+    def flat(cls, n_workers: int = 1, collective: str = "allreduce",
+             sync: str = "bsp", max_delay: int = 4,
+             staleness_bound: int = 1, actors=None,
+             axis: str = "workers") -> "DistPlan":
+        """The legacy single-axis path as a plan: 1-D (workers,) mesh.
+        `Trainer(env, TrainerConfig(plan=DistPlan.flat(4)))` is bitwise
+        what `n_workers=4, topology="allreduce", sync="bsp"` was."""
+        return cls(axes=(AxisSpec(axis, n_workers, collective, sync,
+                                  max_delay, staleness_bound),),
+                   actors=None if actors is None else tuple(actors))
+
+    @classmethod
+    def grid(cls, hosts: int, workers: int,
+             inter: str = "allreduce", intra: str = "allreduce",
+             inter_sync: str = "bsp", intra_sync: str = "bsp",
+             max_delay: int = 4, staleness_bound: int = 1,
+             actors=None) -> "DistPlan":
+        """First-class 2-D (hosts, workers) plan: `intra` is the
+        collective/sync within a host (the inner axis), `inter` across
+        hosts (the outer axis) — e.g. intra-host allreduce + inter-host
+        gossip."""
+        return cls(axes=(AxisSpec("hosts", hosts, inter, inter_sync,
+                                  max_delay, staleness_bound),
+                         AxisSpec("workers", workers, intra, intra_sync,
+                                  max_delay, staleness_bound)),
+                   actors=None if actors is None else tuple(actors))
+
+    @classmethod
+    def parse(cls, spec: str, max_delay: int = 4,
+              staleness_bound: int = 1, actors=None) -> "DistPlan":
+        """Parse the CLI grammar: comma-separated axes, outermost first,
+        each ``name=size[:collective[:sync]]``, e.g.
+
+            hosts=2:allreduce:bsp,workers=2:gossip:asp
+        """
+        axes = []
+        for seg in spec.split(","):
+            parts = seg.strip().split(":")
+            if "=" not in parts[0]:
+                raise ValueError(f"bad plan axis {seg!r}: expected "
+                                 f"name=size[:collective[:sync]]")
+            name, size = parts[0].split("=", 1)
+            collective = parts[1] if len(parts) > 1 else "allreduce"
+            sync = parts[2] if len(parts) > 2 else "bsp"
+            if len(parts) > 3:
+                raise ValueError(f"bad plan axis {seg!r}: too many ':'")
+            axes.append(AxisSpec(name.strip(), int(size), collective,
+                                 sync, max_delay, staleness_bound))
+        return cls(axes=tuple(axes),
+                   actors=None if actors is None else tuple(actors))
+
+    # ---- derived shape ------------------------------------------------
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(a.name for a in self.axes)
+
+    @property
+    def mesh_shape(self) -> Tuple[int, ...]:
+        return tuple(a.size for a in self.axes)
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for a in self.axes:
+            n *= a.size
+        return n
+
+    @property
+    def ring_extra(self) -> int:
+        """Worst-case total extra staleness: per-axis delays add."""
+        return sum(a.ring_extra for a in self.axes)
+
+    def describe(self) -> str:
+        s = ",".join(f"{a.name}={a.size}:{a.collective}:{a.sync}"
+                     for a in self.axes)
+        if self.actors is not None:
+            s += ";actors=" + ",".join(map(str, self.actors))
+        return s
+
+    # ---- mesh construction --------------------------------------------
+    def validate_devices(self, n_available: int) -> None:
+        """Clear error instead of silently slicing/wrapping devices."""
+        if self.n_devices > n_available:
+            shape = "x".join(f"{a.name}={a.size}" for a in self.axes)
+            raise RuntimeError(
+                f"DistPlan mesh ({shape}) needs {self.n_devices} devices "
+                f"but only {n_available} {'is' if n_available == 1 else 'are'} "
+                f"visible; set XLA_FLAGS=--xla_force_host_platform_"
+                f"device_count={self.n_devices} before importing jax "
+                f"(the rl_train CLI does this automatically)")
+
+    def build_mesh(self, devices=None):
+        """Mesh over the first `n_devices` visible devices, row-major:
+        the device at mesh coordinates (i0, i1, ...) is flat device
+        ``sum_a i_a * stride_a`` — the same order the flat plan uses, so
+        nesting never permutes which envs/RNG streams a device owns."""
+        from jax.sharding import Mesh
+        devices = jax.devices() if devices is None else devices
+        self.validate_devices(len(devices))
+        devs = np.asarray(devices[:self.n_devices]).reshape(
+            self.mesh_shape)
+        return Mesh(devs, self.axis_names)
+
+    # ---- compiled pieces consumed by the Trainer ----------------------
+    def linear_index(self):
+        """Traced flat device index inside shard_map (RNG stream id) —
+        identical to the flat plan's `axis_index("workers")`."""
+        idx = jax.lax.axis_index(self.axes[0].name)
+        for a in self.axes[1:]:
+            idx = idx * a.size + jax.lax.axis_index(a.name)
+        return idx
+
+    def compile_collectives(self):
+        """(grad_tx, param_tx) hooks: per-axis collectives applied
+        innermost -> outermost. Consecutive allreduce axes fuse into one
+        pmean over the axis-name tuple (bitwise the flat all-reduce);
+        ps star-gathers per axis; gossip skips the grad exchange and
+        ring-mixes params on its axis instead."""
+        steps = []  # innermost -> outermost: ("allreduce"|"ps", names)
+        for ax in reversed(self.axes):
+            if ax.collective == "allreduce":
+                if steps and steps[-1][0] == "allreduce":
+                    # fuse, keeping names outermost-first: the device
+                    # iteration order of the fused all-reduce then
+                    # matches the flat plan's, bitwise
+                    steps[-1] = ("allreduce", (ax.name,) + steps[-1][1])
+                else:
+                    steps.append(("allreduce", (ax.name,)))
+            elif ax.collective == "ps":
+                steps.append(("ps", ax.name))
+        gossip_axes = tuple(ax.name for ax in reversed(self.axes)
+                            if ax.collective == "gossip")
+
+        def grad_tx(grads):
+            for kind, names in steps:
+                grads = exchange_grads(grads, names, kind)
+            return grads
+
+        def param_tx(params):
+            for name in gossip_axes:
+                params = gossip_mix(params, name)
+            return params
+
+        return grad_tx, (param_tx if gossip_axes else None)
+
+    def make_delay_schedule(self, n_steps: int, key):
+        """(n_steps,) + mesh_shape int32 delays: per-axis §6 schedules
+        broadcast over the other axes and summed. A single-axis plan
+        consumes `key` exactly as the legacy path did (bitwise-identical
+        schedules); multi-axis plans split it per axis."""
+        total = jnp.zeros((n_steps,) + self.mesh_shape, jnp.int32)
+        keys = ([key] if len(self.axes) == 1
+                else list(jax.random.split(key, len(self.axes))))
+        for i, ax in enumerate(self.axes):
+            d = make_delays(SyncConfig(ax.sync, ax.size, ax.max_delay,
+                                       ax.staleness_bound),
+                            n_steps, keys[i])         # (n_steps, size)
+            shape = [n_steps] + [1] * len(self.axes)
+            shape[1 + i] = ax.size
+            total = total + d.reshape(shape)
+        return total
+
+    def actor_schedule(self, superstep_idx: int, default: int) -> int:
+        """Total env-shard count for superstep window `superstep_idx`
+        (iteration // cfg.superstep — NOT the dispatch count, so fused
+        and unfused fits reshard at the same iteration boundaries; the
+        schedule cycles); `default` when the plan is not elastic."""
+        if self.actors is None:
+            return default
+        return self.actors[superstep_idx % len(self.actors)]
+
+
+# all-meta pytrees: plans flow through jit/closure boundaries as static
+# config, never as traced leaves
+jax.tree_util.register_static(AxisSpec)
+jax.tree_util.register_static(DistPlan)

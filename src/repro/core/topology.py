@@ -24,9 +24,11 @@ from jax.sharding import PartitionSpec as P
 TOPOLOGIES = ("allreduce", "ps", "gossip")
 
 
-def exchange_grads(grads, axis: str, topology: str):
-    """Aggregate per-worker grads according to the topology. For gossip,
-    grads are returned unchanged (aggregation happens on params)."""
+def exchange_grads(grads, axis, topology: str):
+    """Aggregate per-worker grads according to the topology; `axis` is a
+    mesh axis name or (for a fused hierarchical allreduce) a tuple of
+    names, outermost first. For gossip, grads are returned unchanged
+    (aggregation happens on params)."""
     if topology == "allreduce":
         return jax.tree_util.tree_map(
             lambda g: jax.lax.pmean(g, axis), grads)
@@ -55,14 +57,18 @@ def gossip_mix(params, axis: str, hops: int = 1):
     return mixed
 
 
-def strip_worker_dim(tree):
-    """Drop the length-1 leading worker dim shard_map leaves on leaves."""
-    return jax.tree_util.tree_map(lambda a: jnp.squeeze(a, 0), tree)
+def strip_worker_dim(tree, n: int = 1):
+    """Drop the `n` length-1 leading mesh dims shard_map keeps on leaves
+    (one per sharded mesh axis; n=1 is the legacy 1-D worker axis)."""
+    axes = tuple(range(n))
+    return jax.tree_util.tree_map(lambda a: jnp.squeeze(a, axes), tree)
 
 
-def restore_worker_dim(tree):
-    """Re-add the length-1 leading worker dim for shard_map outputs."""
-    return jax.tree_util.tree_map(lambda a: a[None], tree)
+def restore_worker_dim(tree, n: int = 1):
+    """Re-add `n` length-1 leading mesh dims for shard_map outputs."""
+    axes = tuple(range(n))
+    return jax.tree_util.tree_map(
+        lambda a: jnp.expand_dims(a, axes), tree)
 
 
 def make_distributed_step(loss_fn, optimizer, topology: str, mesh,
@@ -96,7 +102,9 @@ def make_distributed_step(loss_fn, optimizer, topology: str, mesh,
 
 
 def replicate_for(mesh, axis, params):
-    """Stack params with a leading worker axis (one replica per worker)."""
-    n = mesh.shape[axis]
+    """Stack params with leading replica dim(s) — one per mesh axis in
+    `axis` (a name or tuple of names, outermost first)."""
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    shape = tuple(mesh.shape[a] for a in names)
     return jax.tree_util.tree_map(
-        lambda p: jnp.broadcast_to(p, (n,) + p.shape), params)
+        lambda p: jnp.broadcast_to(p, shape + p.shape), params)

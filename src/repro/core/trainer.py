@@ -1,18 +1,25 @@
-"""Unified Trainer: one fused, topology- and sync-aware training driver.
+"""Unified Trainer: one fused driver executing a declarative DistPlan.
 
 Composes the survey's three acceleration axes over any registered Agent
-(repro.core.agent) instead of one hand-written driver per algorithm:
+(repro.core.agent); *how* the run is distributed is no longer a flat
+`topology: str` over one worker axis but a `repro.core.distribution.
+DistPlan` — a hierarchy of named mesh axes, each with its own
+collective (§3) and sync discipline (§6):
 
   * batch simulation (§4.2): the shared rollout engine fuses env
     dynamics + policy inference into the training program;
-  * system topology (§3, Fig. 3): with `n_workers > 1` the whole
-    iteration runs per-worker inside a `shard_map` over a `workers`
-    mesh axis, gradients routed through `topology.exchange_grads`
-    (ps/allreduce) or params mixed by `topology.gossip_mix` (gossip);
-  * synchronization (§6, Fig. 6): bsp/asp/ssp are rendered as a
-    deterministic policy-lag schedule (`sync.make_delays`) indexing each
-    agent's actor-param ring — workers act with stale params, exactly
-    the staleness the mechanisms differ by.
+  * system topology (§3, Fig. 3): with a multi-device plan the whole
+    iteration runs per-device inside a `shard_map` over the plan's
+    mesh; the plan compiles per-axis collectives into the
+    `grad_tx`/`param_tx` hooks (e.g. intra-host allreduce + inter-host
+    gossip);
+  * synchronization (§6, Fig. 6): per-axis bsp/asp/ssp render as a
+    deterministic policy-lag schedule (`plan.make_delay_schedule`)
+    whose per-axis delays ADD, indexing each agent's actor-param ring;
+  * elastic actors (ElegantRL-Podracer): `plan.actors` varies the env
+    shard count between supersteps — agents only consume `traj`, so
+    `fit` reshards the simulation carry host-side and the agents never
+    see the change.
 
 `fit(fused=True)` scans `superstep` iterations (rollout -> learner_step
 -> lag-ring rotate) inside ONE jitted `lax.scan`: the Python loop
@@ -25,21 +32,17 @@ measured in benchmarks/fused_superstep.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core import agent as agent_api
+from repro.core.distribution import DistPlan
 from repro.core.rollout import rollout
-from repro.core.sync import MECHANISMS, SyncConfig, make_delays
-from repro.core.topology import (TOPOLOGIES, exchange_grads, gossip_mix,
-                                 replicate_for, restore_worker_dim,
+from repro.core.topology import (replicate_for, restore_worker_dim,
                                  strip_worker_dim)
-
-AXIS = "workers"
 
 
 @dataclasses.dataclass
@@ -47,63 +50,57 @@ class TrainerConfig:
     algo: str = "impala"
     iters: int = 60
     superstep: int = 10        # K iterations fused per jitted dispatch
-    n_envs: int = 32           # total envs (split across workers)
+    n_envs: int = 32           # total envs (split across devices)
     unroll: int = 32           # rollout length T per iteration
-    n_workers: int = 1
-    topology: str = "allreduce"   # §3: ps | allreduce | gossip
-    sync: str = "bsp"             # §6: bsp | asp | ssp
+    plan: Optional[DistPlan] = None  # distribution plan; None = 1 worker
     policy_lag: int = 0        # deterministic actor-param lag floor
-    max_delay: int = 4         # asp worst-case extra staleness
-    staleness_bound: int = 1   # ssp bound on extra staleness
     seed: int = 0
     log_every: int = 10
     donate: bool = True        # zero-copy supersteps: donate state/sim
     algo_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
+    def resolved_plan(self) -> DistPlan:
+        return self.plan if self.plan is not None else DistPlan.flat()
+
     @property
     def ring_size(self) -> int:
-        """Actor-param history depth the sync mechanism can reach into."""
-        extra = {"bsp": 0, "asp": self.max_delay,
-                 "ssp": min(self.max_delay, self.staleness_bound)}
-        return self.policy_lag + extra[self.sync] + 1
+        """Actor-param history depth the plan's sync hierarchy can reach
+        into (per-axis staleness adds)."""
+        return self.policy_lag + self.resolved_plan().ring_extra + 1
 
 
 class Trainer:
-    """Drives any registered Agent; see module docstring."""
+    """Drives any registered Agent under a DistPlan; see module doc."""
 
     def __init__(self, env, cfg: TrainerConfig):
-        if cfg.topology not in TOPOLOGIES:
-            raise ValueError(f"topology {cfg.topology!r} not in "
-                             f"{TOPOLOGIES}")
-        if cfg.sync not in MECHANISMS:
-            raise ValueError(f"sync {cfg.sync!r} not in {MECHANISMS}")
-        if cfg.n_envs % cfg.n_workers:
+        plan = cfg.resolved_plan()
+        if cfg.n_envs % plan.n_devices:
             raise ValueError(f"n_envs={cfg.n_envs} must divide evenly "
-                             f"across n_workers={cfg.n_workers}")
+                             f"across the plan's {plan.n_devices} "
+                             f"devices (mesh {plan.mesh_shape})")
+        if plan.actors is not None:
+            bad = [n for n in plan.actors if n % plan.n_devices]
+            if bad:
+                raise ValueError(
+                    f"actors= schedule entries {bad} must divide evenly "
+                    f"across the plan's {plan.n_devices} devices")
         self.env = env
         self.cfg = cfg
+        self.plan = plan
         self.agent = agent_api.make(cfg.algo, env=env,
                                     ring_size=cfg.ring_size,
                                     total_iters=cfg.iters,
                                     **cfg.algo_kwargs)
         self.mesh = None
-        if cfg.n_workers > 1:
-            devs = jax.devices()
-            if len(devs) < cfg.n_workers:
-                raise RuntimeError(
-                    f"n_workers={cfg.n_workers} needs {cfg.n_workers} "
-                    f"devices but only {len(devs)} are visible; set "
-                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
-                    f"{cfg.n_workers} before importing jax (the "
-                    f"rl_train CLI does this automatically)")
-            self.mesh = Mesh(np.array(devs[:cfg.n_workers]), (AXIS,))
-            self._grad_tx = lambda g: exchange_grads(g, AXIS, cfg.topology)
-            self._param_tx = ((lambda p: gossip_mix(p, AXIS))
-                              if cfg.topology == "gossip" else None)
-        else:
-            self._grad_tx = self._param_tx = None
+        self._grad_tx = self._param_tx = None
+        if plan.n_devices > 1:
+            # validate_devices raises the clear device-count error
+            # instead of silently slicing a too-short device list
+            self.mesh = plan.build_mesh(jax.devices())
+            self._grad_tx, self._param_tx = plan.compile_collectives()
         self._base_key = jax.random.PRNGKey(cfg.seed)
         self._step_cache = {}
+        self.actor_shards = []   # actual env count per superstep dispatch
 
     # ---- episode accounting (carried across iterations) --------------
     @staticmethod
@@ -137,7 +134,10 @@ class Trainer:
         it, delay = xs
         key = jax.random.fold_in(self._base_key, it)
         if self.mesh is not None:
-            key = jax.random.fold_in(key, jax.lax.axis_index(AXIS))
+            # per-device RNG stream keyed by the FLAT device index, so a
+            # (hosts, workers) nesting folds the same stream ids as the
+            # flat plan (bitwise-parity invariant)
+            key = jax.random.fold_in(key, self.plan.linear_index())
         k_roll, k_learn = jax.random.split(key)
         actor = self.agent.actor_policy(state, delay)
         traj, env_state = rollout(self.agent.policy, actor, self.env,
@@ -150,7 +150,7 @@ class Trainer:
                                              sim["ep_last"], traj)
         metrics = dict(metrics, episode_return=ep_ret)
         if self.mesh is not None:
-            metrics = {k: jax.lax.pmean(v, AXIS)
+            metrics = {k: jax.lax.pmean(v, self.plan.axis_names)
                        for k, v in metrics.items()}
         sim = {"env": env_state, "ep_run": ep_run, "ep_last": ep_ret}
         return (state, sim), metrics
@@ -179,25 +179,43 @@ class Trainer:
             fn = jax.jit(body, donate_argnums=donate_argnums)
         else:
             from jax.experimental.shard_map import shard_map
+            nd = len(self.plan.axes)
 
             def worker(state, sim, its, delays):
-                # shard_map keeps the (length-1) worker dim — strip/restore
+                # shard_map keeps one length-1 dim per mesh axis on the
+                # sharded leaves — strip before the body, restore after
                 state, sim, metrics = body(
-                    strip_worker_dim(state), strip_worker_dim(sim),
-                    its, delays[:, 0])
-                return (restore_worker_dim(state),
-                        restore_worker_dim(sim), metrics)
+                    strip_worker_dim(state, nd),
+                    strip_worker_dim(sim, nd),
+                    its, delays.reshape(delays.shape[0]))
+                return (restore_worker_dim(state, nd),
+                        restore_worker_dim(sim, nd), metrics)
 
-            w = P(AXIS)
+            w = P(*self.plan.axis_names)
             fn = jax.jit(shard_map(
                 worker, mesh=self.mesh,
-                in_specs=(w, w, P(), P(None, AXIS)),
+                in_specs=(w, w, P(), P(None, *self.plan.axis_names)),
                 out_specs=(w, w, P()), check_rep=False),
                 donate_argnums=donate_argnums)
         self._step_cache[cache_key] = fn
         return fn
 
     # ---- state/schedule construction ---------------------------------
+    def _shard_sim(self, sim):
+        """Reshape a host-layout sim carry (flat env batch) into the
+        plan's mesh layout: one leading dim per mesh axis, row-major, so
+        device (i0, i1, ...) owns the same contiguous env slice its flat
+        linear index would."""
+        if self.mesh is None:
+            return sim
+        shape = self.plan.mesh_shape
+        per = sim["ep_run"].shape[0] // self.plan.n_devices
+        return {"env": jax.tree_util.tree_map(
+                    lambda a: a.reshape(shape + (per,) + a.shape[1:]),
+                    sim["env"]),
+                "ep_run": sim["ep_run"].reshape(shape + (per,)),
+                "ep_last": jnp.broadcast_to(sim["ep_last"], shape)}
+
     def _init_all(self):
         cfg = self.cfg
         k_init, k_env, k_delay = jax.random.split(self._base_key, 3)
@@ -207,26 +225,49 @@ class Trainer:
         sim = {"env": self.env.reset_batch(k_env, cfg.n_envs),
                "ep_run": jnp.zeros((cfg.n_envs,)),
                "ep_last": jnp.full((), jnp.nan)}
-        delays = make_delays(
-            SyncConfig(cfg.sync, cfg.n_workers, cfg.max_delay,
-                       cfg.staleness_bound),
-            cfg.iters, k_delay) + cfg.policy_lag
+        delays = (self.plan.make_delay_schedule(cfg.iters, k_delay)
+                  + cfg.policy_lag)
         if self.mesh is not None:
-            W = cfg.n_workers
-            state = replicate_for(self.mesh, AXIS, state)
-            sim = {"env": jax.tree_util.tree_map(
-                       lambda a: a.reshape((W, a.shape[0] // W)
-                                           + a.shape[1:]), sim["env"]),
-                   "ep_run": sim["ep_run"].reshape(W, -1),
-                   "ep_last": jnp.broadcast_to(sim["ep_last"], (W,))}
+            state = replicate_for(self.mesh, self.plan.axis_names, state)
+            sim = self._shard_sim(sim)
         else:
-            delays = delays[:, 0]
+            delays = delays.reshape(cfg.iters)
         return state, sim, delays
+
+    # ---- elastic actor shards (plan.actors) ---------------------------
+    def _reshard_envs(self, sim, n_total, key):
+        """Grow/shrink the env-shard count between supersteps. Shrinking
+        drops the trailing shards (their in-flight episode accumulators
+        with them); growing resets fresh envs into the new slots. The
+        agents never see this — they only consume `traj`."""
+        lead = 0 if self.mesh is None else len(self.plan.axes)
+        nd = self.plan.n_devices
+        per_new = n_total // nd
+        per_cur = sim["ep_run"].shape[lead]
+        if per_new == per_cur:
+            return sim
+        keep = (slice(None),) * lead
+        if per_new < per_cur:
+            env = jax.tree_util.tree_map(
+                lambda a: a[keep + (slice(0, per_new),)], sim["env"])
+            ep_run = sim["ep_run"][keep + (slice(0, per_new),)]
+        else:
+            fresh = {"env": self.env.reset_batch(
+                         key, (per_new - per_cur) * nd),
+                     "ep_run": jnp.zeros(((per_new - per_cur) * nd,)),
+                     "ep_last": sim["ep_last"]}
+            fresh = self._shard_sim(fresh)
+            env = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=lead),
+                sim["env"], fresh["env"])
+            ep_run = jnp.concatenate([sim["ep_run"], fresh["ep_run"]],
+                                     axis=lead)
+        return {"env": env, "ep_run": ep_run, "ep_last": sim["ep_last"]}
 
     def lower(self, k: int = None, donate: bool = None):
         """Lower (without running) one superstep — lets benchmarks
-        inspect the collective schedule (HLO) per topology and the
-        donation plan (compile().memory_analysis())."""
+        inspect the collective schedule (HLO) per plan and the donation
+        plan (compile().memory_analysis())."""
         k = self.cfg.superstep if k is None else k
         state, sim, delays = self._init_all()
         its = jnp.arange(k, dtype=jnp.int32)
@@ -236,14 +277,28 @@ class Trainer:
     # ---- the driver --------------------------------------------------
     def fit(self, fused: bool = True):
         """Train for cfg.iters iterations. Returns (TrainState, history);
-        with n_workers > 1 the returned state is worker 0's replica."""
+        with a multi-device plan the returned state is device 0's
+        replica."""
         cfg = self.cfg
         state, sim, delays = self._init_all()
         K = cfg.superstep if fused else 1
         history = []
         start = 0
+        self.actor_shards = []
         while start < cfg.iters:
             k = min(K, cfg.iters - start)
+            # the actors= schedule is indexed by cfg.superstep-iteration
+            # window (not dispatch count), so fused and unfused runs
+            # reshard at the same iteration boundaries and stay
+            # numerically equivalent
+            s_idx = start // cfg.superstep
+            n_envs = self.plan.actor_schedule(s_idx, cfg.n_envs)
+            # reshard key offset far above any iteration index so elastic
+            # env resets never alias an iteration's rollout stream
+            sim = self._reshard_envs(
+                sim, n_envs,
+                jax.random.fold_in(self._base_key, (1 << 20) + s_idx))
+            self.actor_shards.append(n_envs)
             step = self._superstep(k)
             its = jnp.arange(start, start + k, dtype=jnp.int32)
             state, sim, metrics = step(state, sim, its,
@@ -257,5 +312,6 @@ class Trainer:
                         for name, v in sorted(metrics.items())}})
             start += k
         if self.mesh is not None:
-            state = jax.tree_util.tree_map(lambda a: a[0], state)
+            first = (0,) * len(self.plan.axes)
+            state = jax.tree_util.tree_map(lambda a: a[first], state)
         return state, history

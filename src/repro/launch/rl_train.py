@@ -1,7 +1,7 @@
 """Unified distributed-DRL launcher: config parsing + ``Trainer.fit``.
 
   PYTHONPATH=src python -m repro.launch.rl_train --algo impala \
-      --env cartpole --topology gossip --sync ssp --n-workers 4 --iters 20
+      --env cartpole --plan "hosts=2:allreduce:bsp,workers=2:gossip:asp"
 
 Every axis of the survey's taxonomy is one orthogonal flag, resolved by
 the unified Agent/Trainer API (repro.core.agent / repro.core.trainer):
@@ -11,19 +11,28 @@ the unified Agent/Trainer API (repro.core.agent / repro.core.trainer):
                                            incl. scenario families like
                                            cartpole-rand and wrapped
                                            variants like pendulum-norm)
-  --topology  ps | allreduce | gossip     (§3, Fig. 3 — gradient/param
-                                           exchange over the worker mesh)
-  --sync      bsp | asp | ssp             (§6, Fig. 6 — policy-lag
-                                           schedule into the actor ring)
-  --n-workers N                           (shard_map `workers` mesh axis;
-                                           on CPU the launcher forces N
-                                           host devices before jax loads)
+  --plan      hierarchical DistPlan: comma-separated mesh axes,
+              outermost first, each ``name=size[:collective[:sync]]``
+              with collective in {ps, allreduce, gossip} (§3) and sync
+              in {bsp, asp, ssp} (§6), e.g.
+              ``hosts=2:allreduce:bsp,workers=4:gossip:asp``
+  --actors    elastic env-shard schedule, e.g. ``32,64,32`` — the total
+              env count cycles through these values per superstep
+              (ElegantRL-Podracer-style elastic actor shards)
 
-Training runs as fused supersteps: ``--superstep K`` iterations of
-rollout -> learner_step -> lag-ring rotate execute inside one jitted
-``lax.scan`` with a single host round-trip per dispatch; ``--unfused``
-falls back to per-iteration dispatch (same numerics, for debugging and
-the benchmarks/fused_superstep.py comparison).
+Legacy single-axis flags remain and lower onto a 1-D plan (the two
+spellings are bitwise-identical):
+
+  --topology  ps | allreduce | gossip     == --plan "workers=N:<topo>:<sync>"
+  --sync      bsp | asp | ssp
+  --n-workers N
+
+The launcher forces enough fake host devices for the plan's mesh before
+jax loads. Training runs as fused supersteps: ``--superstep K``
+iterations of rollout -> learner_step -> lag-ring rotate execute inside
+one jitted ``lax.scan`` with a single host round-trip per dispatch;
+``--unfused`` falls back to per-iteration dispatch (same numerics, for
+debugging and the benchmarks/fused_superstep.py comparison).
 """
 from __future__ import annotations
 
@@ -43,6 +52,19 @@ TOPOLOGY_CHOICES = ("allreduce", "ps", "gossip")
 SYNC_CHOICES = ("bsp", "asp", "ssp")
 
 
+def _plan_n_devices(spec: str) -> int:
+    """Device count a --plan string needs — pure string math so it runs
+    before jax is imported (full validation happens in DistPlan.parse)."""
+    n = 1
+    for seg in spec.split(","):
+        head = seg.strip().split(":")[0]
+        if "=" not in head:
+            raise ValueError(f"bad plan axis {seg!r}: expected "
+                             f"name=size[:collective[:sync]]")
+        n *= int(head.split("=", 1)[1])
+    return n
+
+
 def build_parser():
     ap = argparse.ArgumentParser(
         prog="repro.launch.rl_train",
@@ -59,6 +81,15 @@ def build_parser():
                     help="iterations fused per jitted dispatch")
     ap.add_argument("--n-envs", type=int, default=32)
     ap.add_argument("--unroll", type=int, default=32)
+    ap.add_argument("--plan", default=None, metavar="PLAN",
+                    help="hierarchical DistPlan, comma-separated axes "
+                         "outermost first, each name=size[:collective"
+                         "[:sync]] — overrides --n-workers/--topology/"
+                         "--sync (which lower onto a 1-D plan)")
+    ap.add_argument("--actors", default=None, metavar="N,N,...",
+                    help="elastic env-shard schedule: total env counts "
+                         "cycled per superstep (each must divide across "
+                         "the plan's devices)")
     ap.add_argument("--n-workers", type=int, default=1)
     ap.add_argument("--topology", default="allreduce",
                     choices=TOPOLOGY_CHOICES)
@@ -78,15 +109,21 @@ def build_parser():
 def main(argv=None):
     ap = build_parser()
     args = ap.parse_args(argv)
-    if args.n_workers > 1 and "jax" not in sys.modules:
+    try:
+        n_devices = (_plan_n_devices(args.plan) if args.plan
+                     else args.n_workers)
+    except ValueError as e:
+        ap.error(str(e))
+    if n_devices > 1 and "jax" not in sys.modules:
         flags = os.environ.get("XLA_FLAGS", "")
         if "xla_force_host_platform_device_count" not in flags:
             os.environ["XLA_FLAGS"] = (
                 f"{flags} --xla_force_host_platform_device_count="
-                f"{args.n_workers}").strip()
+                f"{n_devices}").strip()
 
     import repro.envs as envs
     from repro.core import agent as agent_api
+    from repro.core.distribution import DistPlan
     from repro.core.sync import MECHANISMS
     from repro.core.topology import TOPOLOGIES
     from repro.core.trainer import Trainer, TrainerConfig
@@ -104,23 +141,36 @@ def main(argv=None):
         ap.error(f"--env {args.env} not registered; available: "
                  f"{envs.available()}")
 
+    try:
+        actors = (tuple(int(n) for n in args.actors.split(","))
+                  if args.actors else None)
+        if args.plan:
+            plan = DistPlan.parse(args.plan, max_delay=args.max_delay,
+                                  staleness_bound=args.staleness_bound,
+                                  actors=actors)
+        else:  # legacy flags lower onto the bitwise-identical 1-D plan
+            plan = DistPlan.flat(args.n_workers, args.topology,
+                                 args.sync, args.max_delay,
+                                 args.staleness_bound, actors=actors)
+    except ValueError as e:
+        ap.error(str(e))
+
     algo_kwargs = {}
     if args.algo == "impala":
         algo_kwargs["use_vtrace"] = not args.no_vtrace
     cfg = TrainerConfig(
         algo=args.algo, iters=args.iters, superstep=args.superstep,
-        n_envs=args.n_envs, unroll=args.unroll, n_workers=args.n_workers,
-        topology=args.topology, sync=args.sync,
-        policy_lag=args.policy_lag, max_delay=args.max_delay,
-        staleness_bound=args.staleness_bound, seed=args.seed,
+        n_envs=args.n_envs, unroll=args.unroll, plan=plan,
+        policy_lag=args.policy_lag, seed=args.seed,
         log_every=args.log_every, algo_kwargs=algo_kwargs)
     env = envs.make(args.env)
     t0 = time.time()
-    _, history = Trainer(env, cfg).fit(fused=not args.unfused)
+    trainer = Trainer(env, cfg)
+    _, history = trainer.fit(fused=not args.unfused)
     print(json.dumps({
-        "algo": args.algo, "env": args.env, "topology": args.topology,
-        "sync": args.sync, "n_workers": args.n_workers,
-        "fused": not args.unfused,
+        "algo": args.algo, "env": args.env, "plan": plan.describe(),
+        "n_devices": plan.n_devices, "fused": not args.unfused,
+        "actor_shards": trainer.actor_shards[-5:],
         "wall_s": round(time.time() - t0, 1), "history": history[-5:]}))
 
 

@@ -78,6 +78,22 @@ def test_sync_cost_model_ordering(rng):
     assert times["asp"] <= times["ssp"] <= times["bsp"], times
 
 
+@pytest.mark.parametrize("std", (0.01, 0.05, 0.2, 0.5))
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_sync_cost_model_ordering_positive_variance(std, seed):
+    """Sanity pin (survey §6.2): for ANY positive straggler variance the
+    predicted per-iteration cost must order bsp >= ssp >= asp — the
+    barrier hierarchy is monotone in how often workers wait, regardless
+    of how heterogeneous they are."""
+    times = {}
+    for mech in ("bsp", "ssp", "asp"):
+        cfg = SyncConfig(mech, 16, max_delay=8, staleness_bound=4)
+        times[mech] = float(sync_cost_model(cfg, 1.0, std, 96,
+                                            jax.random.PRNGKey(seed)))
+    assert times["asp"] <= times["ssp"] <= times["bsp"], \
+        (std, seed, times)
+
+
 # ------------------------------------------------- multi-device topology
 _TOPOLOGY_SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np, json

@@ -1,7 +1,8 @@
-"""Unified Agent/Trainer API: registry round-trip, fused-vs-unfused
-equivalence, the (topology x sync) smoke matrix on a fake 4-device mesh,
-CLI contract, and the learning-sanity claims migrated off the legacy
-per-algorithm drivers."""
+"""Unified Agent/Trainer API under the Distribution Plan API: registry
+round-trip, fused-vs-unfused equivalence, the (collective x sync) smoke
+matrix as 1-D plans on a fake 4-device mesh, the hierarchical 2-D plan
+matrix on 8 fake devices (incl. flat-vs-nested bitwise parity), elastic
+actor shards, CLI contract, and the learning-sanity claims."""
 import json
 import os
 import subprocess
@@ -14,6 +15,7 @@ import numpy as np
 import pytest
 
 from repro.core import agent as agent_api
+from repro.core.distribution import AxisSpec, DistPlan
 from repro.core.trainer import Trainer, TrainerConfig
 from repro.envs import CartPole, GridWorld
 
@@ -111,6 +113,87 @@ def test_episode_accounting_exact_and_carried():
     assert float(ret) == pytest.approx(((4 + 1) + (9 + 1)) / 2)
 
 
+# ----------------------------------------------------- DistPlan schema
+def test_plan_defaults_to_flat_single_worker():
+    plan = DistPlan.flat()
+    assert plan.axis_names == ("workers",)
+    assert plan.mesh_shape == (1,)
+    assert plan.n_devices == 1 and plan.ring_extra == 0
+
+
+def test_plan_parse_round_trip():
+    s = "hosts=2:allreduce:bsp,workers=4:gossip:asp"
+    plan = DistPlan.parse(s, max_delay=3)
+    assert plan.axis_names == ("hosts", "workers")
+    assert plan.mesh_shape == (2, 4)
+    assert plan.axes[1].collective == "gossip"
+    assert plan.axes[1].sync == "asp"
+    assert plan.describe() == s
+    assert plan.ring_extra == 3  # bsp(0) + asp(max_delay=3)
+
+
+def test_plan_ring_extra_adds_across_axes():
+    plan = DistPlan(axes=(
+        AxisSpec("hosts", 2, sync="asp", max_delay=5),
+        AxisSpec("workers", 2, sync="ssp", max_delay=5,
+                 staleness_bound=2)))
+    assert plan.ring_extra == 5 + 2
+    cfg = TrainerConfig(plan=plan, policy_lag=1)
+    assert cfg.ring_size == 1 + 7 + 1
+
+
+def test_plan_delay_schedule_adds_per_axis():
+    plan = DistPlan(axes=(
+        AxisSpec("hosts", 2, sync="asp", max_delay=3),
+        AxisSpec("workers", 4, sync="bsp")))
+    d = plan.make_delay_schedule(10, jax.random.PRNGKey(0))
+    assert d.shape == (10, 2, 4)
+    # bsp inner axis adds nothing: delays constant across workers
+    np.testing.assert_array_equal(
+        np.asarray(d),
+        np.broadcast_to(np.asarray(d)[:, :, :1], d.shape))
+    assert int(d.max()) <= 3
+
+
+def test_plan_flat_delay_schedule_matches_legacy_sync():
+    """The 1-D plan consumes the key exactly as sync.make_delays did —
+    the legacy schedule is bitwise what the plan produces."""
+    from repro.core.sync import SyncConfig, make_delays
+    key = jax.random.PRNGKey(3)
+    plan = DistPlan.flat(4, sync="ssp", max_delay=6, staleness_bound=2)
+    legacy = make_delays(SyncConfig("ssp", 4, 6, 2), 20, key)
+    np.testing.assert_array_equal(
+        np.asarray(plan.make_delay_schedule(20, key)), np.asarray(legacy))
+
+
+def test_plan_validation_errors():
+    with pytest.raises(ValueError, match="collective"):
+        AxisSpec("workers", 2, collective="star")
+    with pytest.raises(ValueError, match="sync"):
+        AxisSpec("workers", 2, sync="eventual")
+    with pytest.raises(ValueError, match="duplicate"):
+        DistPlan(axes=(AxisSpec("w", 2), AxisSpec("w", 2)))
+    with pytest.raises(ValueError, match="actors"):
+        DistPlan.flat(1, actors=(4, 0))
+    with pytest.raises(ValueError, match="divide"):
+        Trainer(CartPole(), TrainerConfig(n_envs=6,
+                                          plan=DistPlan.flat(4)))
+    with pytest.raises(ValueError, match="actors"):
+        Trainer(CartPole(), TrainerConfig(
+            n_envs=8, plan=DistPlan.flat(4, actors=(8, 6))))
+
+
+def test_plan_device_validation_names_count_and_shape():
+    """Requesting a plan shape larger than the visible device count must
+    raise a clear error naming both — never silently slice devices."""
+    with pytest.raises(RuntimeError) as e:
+        Trainer(CartPole(), TrainerConfig(n_envs=64,
+                                          plan=DistPlan.flat(64)))
+    msg = str(e.value)
+    assert "64 devices" in msg and "workers=64" in msg
+    assert "xla_force_host_platform_device_count" in msg
+
+
 # ------------------------------------------- fused superstep equivalence
 def test_fused_superstep_equals_unfused():
     """Acceptance: K fused iterations in one scan produce the same
@@ -133,25 +216,94 @@ def test_fused_superstep_equals_unfused():
         assert rf["loss"] == pytest.approx(ru["loss"], rel=1e-3)
 
 
-# ------------------------------------- topology x sync smoke (4 devices)
+# -------------------------------------------------- elastic actor shards
+def _hist_equal(h1, h2):
+    """Bitwise history comparison; NaN (pre-first-episode) == NaN."""
+    if len(h1) != len(h2):
+        return False
+    for r1, r2 in zip(h1, h2):
+        if r1.keys() != r2.keys():
+            return False
+        for k in r1:
+            if not np.array_equal(np.float64(r1[k]), np.float64(r2[k]),
+                                  equal_nan=True):
+                return False
+    return True
+
+
+def test_plan_elastic_actors_vary_shards_deterministically():
+    """plan.actors cycles the env-shard count per superstep window; the
+    per-shape numerics are pinned: two identical runs agree bitwise,
+    the shard trace is exactly the schedule, and the unfused fit
+    reshards at the same iteration boundaries (same numerics, one
+    schedule entry per cfg.superstep iterations)."""
+    env = CartPole()
+
+    def run(fused=True):
+        cfg = TrainerConfig(algo="impala", iters=9, superstep=3,
+                            n_envs=8, unroll=6, log_every=1, seed=2,
+                            plan=DistPlan.flat(1, actors=(8, 4, 8)),
+                            algo_kwargs={"hidden": (8,)})
+        tr = Trainer(env, cfg)
+        state, hist = tr.fit(fused=fused)
+        return state, hist, tr.actor_shards
+
+    s1, h1, shards1 = run()
+    s2, h2, shards2 = run()
+    assert shards1 == [8, 4, 8] and shards2 == shards1
+    assert _hist_equal(h1, h2)
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    s3, h3, shards3 = run(fused=False)
+    assert shards3 == [8] * 3 + [4] * 3 + [8] * 3  # per-dispatch trace
+    assert _hist_equal(h3, h1)
+    for a, b in zip(jax.tree_util.tree_leaves(s3.params),
+                    jax.tree_util.tree_leaves(s1.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_plan_constant_actors_schedule_is_bitwise_noop():
+    """A constant actors= schedule equal to n_envs never reshards and
+    is bitwise the plain run — elasticity is invisible to the agent."""
+    env = CartPole()
+
+    def run(plan):
+        cfg = TrainerConfig(algo="impala", iters=6, superstep=3,
+                            n_envs=8, unroll=6, log_every=1, seed=0,
+                            plan=plan, algo_kwargs={"hidden": (8,)})
+        tr = Trainer(env, cfg)
+        state, hist = tr.fit()
+        return state, hist
+
+    s_c, h_c = run(DistPlan.flat(1, actors=(8,)))
+    s_p, h_p = run(None)
+    assert _hist_equal(h_c, h_p)
+    for a, b in zip(jax.tree_util.tree_leaves(s_c.params),
+                    jax.tree_util.tree_leaves(s_p.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------- collective x sync smoke (1-D plans, 4 devs)
 _MATRIX_SCRIPT = textwrap.dedent("""
     import itertools, json, math
     import repro.envs as envs
+    from repro.core.distribution import DistPlan
     from repro.core.trainer import Trainer, TrainerConfig
     env = envs.make("cartpole")
     out = {}
-    for topo, sync in itertools.product(("allreduce", "ps", "gossip"),
+    for coll, sync in itertools.product(("allreduce", "ps", "gossip"),
                                         ("bsp", "asp", "ssp")):
+        plan = DistPlan.flat(4, collective=coll, sync=sync, max_delay=2)
         cfg = TrainerConfig(algo="impala", iters=6, superstep=3,
-                            n_envs=8, unroll=8, n_workers=4,
-                            topology=topo, sync=sync, max_delay=2,
+                            n_envs=8, unroll=8, plan=plan,
                             log_every=2, algo_kwargs={"hidden": (8,)})
         _, hist = Trainer(env, cfg).fit()
         last = hist[-1]
         # episode_return is NaN until the first episode completes (the
         # honest boundary accounting) — require losses always finite
         # and the final return real
-        out[f"{topo}/{sync}"] = {
+        out[f"{coll}/{sync}"] = {
             "loss": last["loss"], "ret": last["episode_return"],
             "finite": (all(math.isfinite(r["loss"]) for r in hist)
                        and math.isfinite(last["episode_return"]))}
@@ -192,21 +344,95 @@ def test_matrix_sync_topologies_agree(matrix_results):
         assert a == pytest.approx(p, rel=1e-3), (sync, a, p)
 
 
-# ----------------------------------------------------------- validation
-def test_bad_topology_and_sync_raise():
-    env = CartPole()
-    with pytest.raises(ValueError, match="topology"):
-        Trainer(env, TrainerConfig(topology="star"))
-    with pytest.raises(ValueError, match="sync"):
-        Trainer(env, TrainerConfig(sync="eventual"))
-    with pytest.raises(ValueError, match="divide"):
-        Trainer(env, TrainerConfig(n_envs=6, n_workers=4))
+# ----------------------- hierarchical 2-D plan matrix (8 fake devices)
+_PLAN_MATRIX_SCRIPT = textwrap.dedent("""
+    import itertools, json, math
+    import jax, numpy as np
+    import repro.envs as envs
+    from repro.core.distribution import AxisSpec, DistPlan
+    from repro.core.trainer import Trainer, TrainerConfig
+    env = envs.make("cartpole")
+
+    def fit(plan):
+        cfg = TrainerConfig(algo="impala", iters=6, superstep=3,
+                            n_envs=8, unroll=8, plan=plan,
+                            log_every=1, seed=0,
+                            algo_kwargs={"hidden": (8,)})
+        return Trainer(env, cfg).fit()
+
+    def bitwise(s1, s2):
+        return all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                                   jax.tree_util.tree_leaves(s2.params)))
+
+    def hist_eq(h1, h2):   # NaN-aware (pre-first-episode returns)
+        return all(r1.keys() == r2.keys()
+                   and all(np.array_equal(np.float64(r1[k]),
+                                          np.float64(r2[k]),
+                                          equal_nan=True) for k in r1)
+                   for r1, r2 in zip(h1, h2)) and len(h1) == len(h2)
+
+    out = {}
+    # acceptance: flat 4-worker allreduce/bsp == (1,4) nesting == (2,2)
+    # hierarchical intra+inter allreduce, bitwise
+    s_flat, h_flat = fit(DistPlan.flat(4))
+    s_14, h_14 = fit(DistPlan(axes=(AxisSpec("hosts", 1),
+                                    AxisSpec("workers", 4))))
+    s_22, h_22 = fit(DistPlan.grid(2, 2))
+    out["parity"] = {
+        "flat_vs_1x4": bitwise(s_flat, s_14) and hist_eq(h_flat, h_14),
+        "flat_vs_2x2": bitwise(s_flat, s_22) and hist_eq(h_flat, h_22)}
+    # hierarchical combos: inter-host collective x per-axis sync
+    for inter, isync in itertools.product(("ps", "gossip"),
+                                          ("bsp", "asp", "ssp")):
+        plan = DistPlan.grid(2, 2, inter=inter, intra="allreduce",
+                             inter_sync=isync, intra_sync="asp",
+                             max_delay=2)
+        _, hist = fit(plan)
+        out[f"2x2/{inter}/{isync}"] = {
+            "loss": hist[-1]["loss"], "ret": hist[-1]["episode_return"],
+            "finite": (all(math.isfinite(r["loss"]) for r in hist)
+                       and math.isfinite(hist[-1]["episode_return"]))}
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def plan_matrix_results():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", _PLAN_MATRIX_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_plan_matrix_flat_vs_nested_bitwise_parity(plan_matrix_results):
+    """Acceptance: a (hosts=2, workers=2) plan with intra-host allreduce
+    + inter-host allreduce under bsp trains bitwise-identically to the
+    legacy flat 4-worker allreduce path (and so does the (1,4)
+    nesting) — the hierarchy is purely descriptive."""
+    assert plan_matrix_results["parity"]["flat_vs_1x4"]
+    assert plan_matrix_results["parity"]["flat_vs_2x2"]
+
+
+def test_plan_matrix_hierarchical_combos_train(plan_matrix_results):
+    combos = [k for k in plan_matrix_results if k.startswith("2x2/")]
+    assert len(combos) == 6
+    for combo in combos:
+        res = plan_matrix_results[combo]
+        assert res["finite"], combo
+        assert res["ret"] > 0, (combo, res)
 
 
 # -------------------------------------------------------- CLI contract
 def test_cli_a3c_with_topology_and_sync_flags():
-    """Satellites: --topology/--sync/--n-workers exist and A3C is
-    reachable from the CLI via the registry."""
+    """Legacy flags survive and lower onto a 1-D plan; A3C is reachable
+    from the CLI via the registry."""
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.rl_train", "--algo", "a3c",
          "--env", "cartpole", "--topology", "allreduce", "--sync", "asp",
@@ -216,7 +442,26 @@ def test_cli_a3c_with_topology_and_sync_flags():
         env=dict(os.environ, PYTHONPATH=SRC), timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
-    assert out["algo"] == "a3c" and out["sync"] == "asp"
+    assert out["algo"] == "a3c"
+    assert out["plan"] == "workers=1:allreduce:asp"
+    assert out["history"]
+
+
+def test_cli_plan_flag_runs_hierarchical_mesh():
+    """--plan parses the hierarchical grammar, forces enough fake
+    devices before jax loads, and reports the plan + elastic shards."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.rl_train",
+         "--plan", "hosts=2:allreduce:bsp,workers=2:allreduce:bsp",
+         "--actors", "8,16", "--iters", "4", "--superstep", "2",
+         "--n-envs", "8", "--unroll", "4", "--log-every", "2"],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=SRC), timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["n_devices"] == 4
+    assert out["plan"].startswith("hosts=2:allreduce:bsp,workers=2")
+    assert out["actor_shards"] == [8, 16]
     assert out["history"]
 
 
@@ -228,6 +473,16 @@ def test_cli_rejects_unknown_topology():
         env=dict(os.environ, PYTHONPATH=SRC), timeout=120)
     assert r.returncode != 0
     assert "--topology" in r.stderr
+
+
+def test_cli_rejects_malformed_plan():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.rl_train",
+         "--plan", "workers:4"],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=SRC), timeout=120)
+    assert r.returncode != 0
+    assert "plan" in r.stderr.lower()
 
 
 # ------------------------------------------- learning sanity (migrated)
