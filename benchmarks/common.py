@@ -36,6 +36,47 @@ def emit(rows):
     return rows
 
 
+_ROW_KEYS = {"name", "us_per_call", "derived"}
+
+
+def validate_bench_json(doc):
+    """Validate the repro-bench/v1 shape (top-level keys and row
+    types), raising ValueError naming the offending key or row —
+    tests/test_bench_schema.py runs this over every repo-root
+    BENCH_*.json so the perf trajectory can't silently rot. Returns
+    `doc` for chaining."""
+    if not isinstance(doc, dict):
+        raise ValueError(f"bench doc must be a JSON object, "
+                         f"got {type(doc).__name__}")
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"key 'schema' must be {SCHEMA!r}, "
+                         f"got {doc.get('schema')!r}")
+    for key, typ in (("benchmark", str), ("backend", str),
+                     ("meta", dict), ("rows", list)):
+        if not isinstance(doc.get(key), typ):
+            raise ValueError(
+                f"key {key!r} must be {typ.__name__}, got "
+                f"{type(doc.get(key)).__name__}: {doc.get(key)!r}")
+    for i, row in enumerate(doc["rows"]):
+        if not isinstance(row, dict):
+            raise ValueError(f"rows[{i}] must be an object, got "
+                             f"{type(row).__name__}")
+        if set(row) != _ROW_KEYS:
+            raise ValueError(f"rows[{i}] keys {sorted(row)} != "
+                             f"{sorted(_ROW_KEYS)}")
+        if not isinstance(row["name"], str):
+            raise ValueError(f"rows[{i}]['name'] must be a string, "
+                             f"got {row['name']!r}")
+        if not (row["us_per_call"] is None
+                or isinstance(row["us_per_call"], (int, float))):
+            raise ValueError(f"rows[{i}]['us_per_call'] must be a "
+                             f"number or null, got {row['us_per_call']!r}")
+        if not isinstance(row["derived"], str):
+            raise ValueError(f"rows[{i}]['derived'] must be a string, "
+                             f"got {row['derived']!r}")
+    return doc
+
+
 def write_bench_json(benchmark, rows, **meta):
     """Write repo-root BENCH_<benchmark>.json in the repro-bench/v1
     schema; returns the path."""
@@ -46,6 +87,7 @@ def write_bench_json(benchmark, rows, **meta):
                                      if us is not None else None),
                      "derived": derived}
                     for name, us, derived in rows]}
+    validate_bench_json(doc)  # never write a malformed trajectory file
     path = os.path.join(REPO_ROOT, f"BENCH_{benchmark}.json")
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)

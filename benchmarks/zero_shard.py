@@ -1,0 +1,143 @@
+"""ZeRO-style learner-state sharding benchmark (tentpole PR 5).
+
+Measures the per-device memory footprint of the learner state under a
+replicated DistPlan vs a `shard`-role axis (ZeRO-2: optimizer state
+partitioned 1/N per device, gradients reduce-scattered, params
+all-gathered before the next rollout):
+
+  1. exact pytree accounting: per-device bytes of `TrainState.params`
+     and `opt_state` straight off the initialized, mesh-laid-out state
+     (replicated plans carry the full adamw m/v per device; sharded
+     plans carry one 1/N flattened chunk);
+  2. XLA ground truth: live bytes (argument + output + temp − donated
+     alias) of the compiled superstep from
+     `Trainer.lower(k).compile().memory_analysis()`;
+  3. walltime per superstep for both plans (the all-gather cost the
+     memory saving buys).
+
+The headline row `zero2/opt_state_shrink` pins the acceptance claim:
+per-device opt_state bytes shrink ~1/shard_size (within flatten-and-pad
+padding) for the sharded plan. Always writes repo-root BENCH_zero.json
+(repro-bench/v1) — the perf trajectory for learner sharding starts
+there.
+
+Usage: python benchmarks/zero_shard.py [--quick]
+"""
+import argparse
+import os
+import sys
+import time
+
+N_DEVICES = 4  # replicated workers=4 vs workers=2 x shard=2
+
+# the plans below need fake host devices; force them before jax loads
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count="
+            f"{N_DEVICES}").strip()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def _setup_path():
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), ".."))
+
+
+if __package__ is None or __package__ == "":
+    _setup_path()
+
+from benchmarks.common import emit, write_bench_json  # noqa: E402
+
+
+def _per_device_bytes(tree, n_devices):
+    """Exact per-device bytes of a mesh-laid-out pytree (every leaf
+    carries one leading dim per mesh axis, so total/n_devices is one
+    device's slice)."""
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(tree)
+               ) // n_devices
+
+
+def _live_bytes(trainer, k):
+    ma = trainer.lower(k).compile().memory_analysis()
+    return (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+
+
+def _measure(env, plan, label, quick, hidden):
+    from repro.core.trainer import Trainer, TrainerConfig
+    K = 2 if quick else 4
+    reps = 2 if quick else 5
+    cfg = TrainerConfig(algo="impala", iters=K, superstep=K, n_envs=8,
+                        unroll=8, plan=plan, log_every=K,
+                        algo_kwargs={"hidden": hidden})
+    tr = Trainer(env, cfg)
+    state, sim, delays = tr._init_all()
+    nd = plan.n_devices
+    params_b = _per_device_bytes(state.params, nd)
+    opt_b = _per_device_bytes(state.opt_state, nd)
+    step = tr._superstep(K)
+    its = jnp.arange(K, dtype=jnp.int32)
+    state, sim, m = step(state, sim, its, delays[:K])  # compile
+    jax.block_until_ready(m)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        state, sim, m = step(state, sim, its, delays[:K])
+    jax.block_until_ready(m)
+    wall = (time.perf_counter() - t0) / reps
+    live = _live_bytes(tr, K)
+    return {"label": label, "plan": plan.describe(),
+            "params_b": params_b, "opt_b": opt_b, "wall": wall,
+            "live": live, "K": K, "partition": tr.partition}
+
+
+def run(quick=False):
+    import repro.envs as envs
+    from repro.core.distribution import DistPlan
+
+    hidden = (64, 64) if quick else (256, 256)
+    env = envs.make("cartpole")
+    rep = _measure(env, DistPlan.flat(N_DEVICES), "replicated", quick,
+                   hidden)
+    shd = _measure(env, DistPlan.zero(N_DEVICES // 2, 2), "zero2", quick,
+                   hidden)
+    n_shards = shd["partition"]["n_shards"]
+    pad_b = 4 * (shd["partition"]["padded"] - shd["partition"]["size"])
+    rows = []
+    for r in (rep, shd):
+        rows.append((
+            f"zero_shard/{r['label']}", r["wall"] / r["K"] * 1e6,
+            f"plan={r['plan']};params_per_device_bytes={r['params_b']};"
+            f"opt_state_per_device_bytes={r['opt_b']};"
+            f"state_per_device_bytes={r['params_b'] + r['opt_b']};"
+            f"xla_live_bytes={r['live']};K={r['K']}"))
+    shrink = shd["opt_b"] / max(rep["opt_b"], 1)
+    total_shrink = ((shd["params_b"] + shd["opt_b"])
+                    / max(rep["params_b"] + rep["opt_b"], 1))
+    rows.append((
+        "zero2/opt_state_shrink", None,
+        f"ratio={shrink:.4f};ideal=1/{n_shards};padding_bytes={pad_b};"
+        f"params_plus_opt_ratio={total_shrink:.4f};"
+        f"xla_live_saved_bytes={rep['live'] - shd['live']}"))
+    emit(rows)
+    path = write_bench_json("zero", rows, quick=quick,
+                            n_devices=N_DEVICES,
+                            partition=shd["partition"])
+    print(f"# wrote {path}", file=sys.stderr)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes/reps (CI smoke)")
+    run(quick=ap.parse_args().quick)
+
+
+if __name__ == "__main__":
+    main()

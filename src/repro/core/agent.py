@@ -28,6 +28,27 @@ from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+
+def flatten_and_pad(tree, n_shards: int):
+    """Flatten a pytree to ONE 1-D vector zero-padded to a multiple of
+    `n_shards` — the default partitioning for ZeRO-style learner-state
+    sharding: any params pytree becomes `n_shards` equal contiguous
+    chunks with no per-algorithm partitioning code.
+
+    Returns ``(vec, size, unravel)``: `vec` the padded vector (its
+    length divides evenly by `n_shards` by construction), `size` the
+    true unpadded length, and ``unravel(vec[:size])`` restores the
+    pytree. Mixed-dtype trees follow ravel_pytree's promotion; all
+    agents here carry uniform f32 learner params."""
+    vec, unravel = ravel_pytree(tree)
+    if vec.size == 0:
+        raise ValueError("cannot shard an empty parameter pytree")
+    pad = (-vec.size) % n_shards
+    if pad:
+        vec = jnp.concatenate([vec, jnp.zeros((pad,), vec.dtype)])
+    return vec, vec.size - pad, unravel
 
 
 @dataclasses.dataclass
@@ -69,6 +90,15 @@ class Agent:
         """Behavior params `delay` learner-updates old (clipped to the
         ring depth) — §6 sync mechanisms are schedules over `delay`."""
         return self._ring_read(state.ring, delay)
+
+    def partition_spec(self, state: TrainState):
+        """The sub-pytree of `state` the optimizer updates — what
+        `opt_state` mirrors and what a ZeRO `shard`-role mesh axis
+        partitions (`flatten_and_pad` turns it into equal chunks, so
+        any pytree shards without per-algorithm partitioning code).
+        Default: the whole params pytree; override when the optimizer
+        targets a subtree (see DQNAgent: only the online net)."""
+        return state.params
 
     # -- lag-ring helpers ----------------------------------------------
     def _ring_init(self, behavior_params):

@@ -188,6 +188,11 @@ class DQNAgent(Agent):
                           self._ring_init(params["online"]),
                           jnp.zeros((), jnp.int32))
 
+    def partition_spec(self, state):
+        """Only the online net is optimizer-updated (opt_state mirrors
+        it); target net + step counter ride outside the shard."""
+        return state.params["online"]
+
     def actor_policy(self, state, delay=0):
         frac = jnp.clip(state.steps.astype(jnp.float32)
                         / self.eps_decay_steps, 0.0, 1.0)

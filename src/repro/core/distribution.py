@@ -20,6 +20,16 @@ A `DistPlan` is that description as a static pytree-of-config:
     policy-lag delays (repro.core.sync) which ADD across levels: a
     device at mesh coordinates (i0, i1, ...) acts with params
     ``sum_a delay_a[t, i_a]`` learner-updates old;
+  * a per-axis ``role`` — ``data`` (plain data-parallel workers) or
+    ``shard`` (ZeRO-2 learner-state sharding, §5 memory ceiling): over
+    a shard axis the Trainer reduce-scatters gradients, applies the
+    optimizer update on the local 1/N slice of the flattened
+    params/opt_state, and all-gathers params before the next rollout.
+    A shard axis must use ``allreduce`` (its gradient mean fuses into
+    the data-parallel pmean, making pmean + local slice the
+    reduce-scatter), so a sharded plan trains f32-bitwise-identically
+    to its replicated counterpart and a shard axis of size 1 is a
+    bitwise no-op (pinned in tests/test_trainer.py);
   * an optional elastic ``actors=`` schedule: total env-shard counts
     cycled per superstep dispatch. Agents only consume ``traj``, so
     resharding between supersteps is invisible to them.
@@ -43,17 +53,25 @@ _SYNC_EXTRA = {"bsp": lambda ax: 0,
                "asp": lambda ax: ax.max_delay,
                "ssp": lambda ax: min(ax.max_delay, ax.staleness_bound)}
 
+ROLES = ("data", "shard")
+
 
 @dataclasses.dataclass(frozen=True)
 class AxisSpec:
     """One named mesh axis: its size, how gradients/params are exchanged
-    across it (§3), and how stale its members may act (§6)."""
+    across it (§3), how stale its members may act (§6), and its role —
+    `data` (plain data-parallel workers) or `shard` (ZeRO-2 learner-
+    state sharding: gradients are reduce-scattered over the axis, the
+    optimizer update runs on the local 1/size slice of the flattened
+    params/opt_state, and params are all-gathered before the next
+    rollout)."""
     name: str
     size: int
     collective: str = "allreduce"   # §3: allreduce | ps | gossip
     sync: str = "bsp"               # §6: bsp | asp | ssp
     max_delay: int = 4              # asp worst-case extra staleness
     staleness_bound: int = 1        # ssp bound on extra staleness
+    role: str = "data"              # data | shard (ZeRO learner states)
 
     def __post_init__(self):
         if not self.name:
@@ -66,6 +84,16 @@ class AxisSpec:
         if self.sync not in MECHANISMS:
             raise ValueError(f"axis {self.name!r}: sync {self.sync!r} "
                              f"not in {MECHANISMS}")
+        if self.role not in ROLES:
+            raise ValueError(f"axis {self.name!r}: role {self.role!r} "
+                             f"not in {ROLES}")
+        if self.role == "shard" and self.collective != "allreduce":
+            raise ValueError(
+                f"axis {self.name!r}: a shard-role axis must use the "
+                f"'allreduce' collective (got {self.collective!r}) — "
+                f"its gradient mean fuses into the data-parallel "
+                f"reduction so that pmean + local slice IS the "
+                f"reduce-scatter (bitwise the replicated plan)")
 
     @property
     def ring_extra(self) -> int:
@@ -83,10 +111,18 @@ class DistPlan:
 
     def __post_init__(self):
         if not self.axes:
-            raise ValueError("DistPlan needs at least one mesh axis")
+            raise ValueError("DistPlan needs at least one mesh axis "
+                             "(empty axis list)")
         names = [a.name for a in self.axes]
         if len(set(names)) != len(names):
-            raise ValueError(f"duplicate mesh axis names: {names}")
+            dups = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate mesh axis name(s) {dups} "
+                             f"in {names}")
+        shards = [a.name for a in self.axes if a.role == "shard"]
+        if len(shards) > 1:
+            raise ValueError(f"at most one shard-role axis is supported "
+                             f"(got {shards}); compose a bigger shard "
+                             f"group as one axis instead")
         if self.actors is not None:
             if not self.actors:
                 raise ValueError("actors= schedule must be non-empty")
@@ -126,26 +162,59 @@ class DistPlan:
                    actors=None if actors is None else tuple(actors))
 
     @classmethod
+    def zero(cls, n_workers: int, n_shards: int,
+             collective: str = "allreduce", sync: str = "bsp",
+             max_delay: int = 4, staleness_bound: int = 1,
+             actors=None) -> "DistPlan":
+        """Data-parallel workers + a ZeRO-2 shard axis (innermost, so
+        the shard group sits on the fastest fabric): gradients reduce-
+        scatter over `shard`, the optimizer updates the local 1/n slice,
+        params all-gather before the next rollout."""
+        return cls(axes=(AxisSpec("workers", n_workers, collective, sync,
+                                  max_delay, staleness_bound),
+                         AxisSpec("shard", n_shards, "allreduce", "bsp",
+                                  max_delay, staleness_bound,
+                                  role="shard")),
+                   actors=None if actors is None else tuple(actors))
+
+    @classmethod
     def parse(cls, spec: str, max_delay: int = 4,
               staleness_bound: int = 1, actors=None) -> "DistPlan":
         """Parse the CLI grammar: comma-separated axes, outermost first,
-        each ``name=size[:collective[:sync]]``, e.g.
+        each ``name=size[:collective[:sync[:role]]]``, e.g.
 
             hosts=2:allreduce:bsp,workers=2:gossip:asp
-        """
+            workers=4:allreduce:bsp,shard=2:allreduce:bsp:shard
+
+        Role ``shard`` marks the ZeRO-2 learner-state sharding axis
+        (default ``data``). Empty specs, empty segments and duplicate
+        axis names raise errors naming the offending input."""
+        if not spec or not spec.strip():
+            raise ValueError(
+                "empty plan: expected comma-separated axes "
+                "name=size[:collective[:sync[:role]]], e.g. "
+                "'workers=4:allreduce:bsp'")
         axes = []
         for seg in spec.split(","):
             parts = seg.strip().split(":")
             if "=" not in parts[0]:
                 raise ValueError(f"bad plan axis {seg!r}: expected "
-                                 f"name=size[:collective[:sync]]")
+                                 f"name=size[:collective[:sync[:role]]]")
             name, size = parts[0].split("=", 1)
+            try:
+                size = int(size)
+            except ValueError:
+                raise ValueError(f"bad plan axis {seg!r}: size "
+                                 f"{size!r} is not an integer") from None
             collective = parts[1] if len(parts) > 1 else "allreduce"
             sync = parts[2] if len(parts) > 2 else "bsp"
-            if len(parts) > 3:
-                raise ValueError(f"bad plan axis {seg!r}: too many ':'")
-            axes.append(AxisSpec(name.strip(), int(size), collective,
-                                 sync, max_delay, staleness_bound))
+            role = parts[3] if len(parts) > 3 else "data"
+            if len(parts) > 4:
+                raise ValueError(f"bad plan axis {seg!r}: too many ':' "
+                                 f"(grammar is name=size[:collective"
+                                 f"[:sync[:role]]])")
+            axes.append(AxisSpec(name.strip(), size, collective,
+                                 sync, max_delay, staleness_bound, role))
         return cls(axes=tuple(axes),
                    actors=None if actors is None else tuple(actors))
 
@@ -170,8 +239,27 @@ class DistPlan:
         """Worst-case total extra staleness: per-axis delays add."""
         return sum(a.ring_extra for a in self.axes)
 
+    @property
+    def shard_axis(self) -> Optional[AxisSpec]:
+        """The (single, validated) ZeRO shard-role axis, or None."""
+        for a in self.axes:
+            if a.role == "shard":
+                return a
+        return None
+
+    @property
+    def data_axes(self) -> Tuple[AxisSpec, ...]:
+        return tuple(a for a in self.axes if a.role == "data")
+
+    @property
+    def shard_size(self) -> int:
+        """Learner-state shard count (1 when no shard axis)."""
+        ax = self.shard_axis
+        return 1 if ax is None else ax.size
+
     def describe(self) -> str:
         s = ",".join(f"{a.name}={a.size}:{a.collective}:{a.sync}"
+                     + (f":{a.role}" if a.role != "data" else "")
                      for a in self.axes)
         if self.actors is not None:
             s += ";actors=" + ",".join(map(str, self.actors))

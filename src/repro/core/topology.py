@@ -12,10 +12,18 @@ exchange strategies over a named mesh axis, usable inside shard_map.
     instead params are averaged with the ring neighbour each step via
     lax.ppermute. Workers' models stay ε-close rather than identical
     (property-tested in tests/test_topology.py).
+
+Beside the gradient-exchange strategies live the ZeRO-2 learner-state
+sharding pieces for `shard`-role DistPlan axes: reduce-scatter /
+all-gather helpers (`local_shard` / `reduce_scatter_mean` /
+`all_gather_shards`) and `zero_sharded_optimizer`, which partitions any
+optimizer's state 1/n per device over a mesh axis while keeping params
+replicated (survey §5 memory ceiling; SRL / Stooke & Abbeel's
+large-batch learner split).
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +63,104 @@ def gossip_mix(params, axis: str, hops: int = 1):
         mixed = jax.tree_util.tree_map(
             lambda a, b: 0.5 * (a + b), mixed, nbr)
     return mixed
+
+
+# ---- ZeRO-style learner-state sharding (shard-role mesh axes) --------
+def local_shard(vec, axis: str, n_shards: int):
+    """This device's 1/n contiguous chunk of a (padded) 1-D vector —
+    the scatter half of a reduce-scatter, indexed by the device's
+    position on mesh axis `axis`."""
+    chunk = vec.shape[0] // n_shards
+    i = jax.lax.axis_index(axis)
+    return jax.lax.dynamic_slice_in_dim(vec, i * chunk, chunk)
+
+
+def reduce_scatter_mean(vec, axis: str, n_shards: int):
+    """Mean-reduce `vec` over `axis`, keeping only the local 1/n chunk
+    (ZeRO-2's gradient exchange). Rendered as the fused pmean + local
+    slice — bitwise the replicated reduction, the same honest-SPMD
+    argument as `ps` vs `allreduce` above; a raw `psum_scatter` lowers
+    to fewer bytes but reorders the reduction and would break the
+    shard-size-1 bitwise guarantee (tests/test_trainer.py). Inside the
+    Trainer the pmean half is already fused into `grad_tx` (the shard
+    axis is a mandatory `allreduce`), so only `local_shard` runs there."""
+    return local_shard(jax.lax.pmean(vec, axis), axis, n_shards)
+
+
+def all_gather_shards(chunk, axis: str):
+    """Inverse of `local_shard`: tiled all-gather concatenating every
+    device's chunk in axis-index order back into the full vector."""
+    return jax.lax.all_gather(chunk, axis, tiled=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZeROShardedOptimizer:
+    """ZeRO-2 discipline over mesh axis `axis`: wraps any Optimizer-like
+    object (init/update/apply, optional pre/shard_update split — see
+    repro.optim.Optimizer) so the optimizer state lives flattened-and-
+    padded 1/n per device while params stay replicated.
+
+    `apply(params, opt_state, grads)` expects grads ALREADY mean-reduced
+    over `axis` (inside the Trainer that pmean is fused into `grad_tx`,
+    making pmean+`local_shard` a reduce-scatter); it then
+
+      1. runs the optimizer's `pre` transform — the part that must see
+         the FULL gradient pytree, e.g. global-norm clipping — on the
+         unsharded grads,
+      2. flattens-and-pads grads and params and takes the local 1/n
+         chunk (the scatter),
+      3. applies the per-coordinate update on the slice against the
+         local `opt_state` shard,
+      4. all-gathers the updated param chunks back into the full,
+         replicated params pytree before the next rollout.
+
+    Every step is per-coordinate or a deterministic concatenation, so a
+    sharded fit is f32-bitwise the replicated fit (and a shard axis of
+    size 1 is a bitwise no-op) — pinned in tests/test_trainer.py.
+
+    `init(params)` returns the inner state over ONE all-zero chunk:
+    since every shard's moments start at zero, the Trainer's plain
+    replicate-then-split path seeds each device's shard correctly and
+    the chunks diverge naturally as training proceeds."""
+    inner: object
+    axis: str
+    n_shards: int
+
+    def init(self, params):
+        from repro.core.agent import flatten_and_pad
+        if self.n_shards == 1:
+            return self.inner.init(params)
+        vec, _, _ = flatten_and_pad(params, self.n_shards)
+        chunk = vec.size // self.n_shards
+        return self.inner.init(jnp.zeros((chunk,), vec.dtype))
+
+    def apply(self, params, opt_state, grads):
+        from repro.core.agent import flatten_and_pad
+        if self.n_shards == 1:
+            # sharding into one chunk is the identity: delegate to the
+            # inner optimizer untouched, so a size-1 shard axis is a
+            # bitwise no-op BY CONSTRUCTION (same code path, same
+            # pytree-shaped opt_state as the replicated trainer)
+            return self.inner.apply(params, opt_state, grads)
+        pre = getattr(self.inner, "pre", None)
+        bare = (self.inner.shard_update if pre is not None
+                else self.inner.update)
+        if pre is not None:
+            grads = pre(grads)  # full-gradient transform (global norm)
+        gvec, _, _ = flatten_and_pad(grads, self.n_shards)
+        pvec, size, unravel = flatten_and_pad(params, self.n_shards)
+        g_loc = local_shard(gvec, self.axis, self.n_shards)
+        p_loc = local_shard(pvec, self.axis, self.n_shards)
+        updates, opt_state = bare(g_loc, opt_state, p_loc)
+        full = all_gather_shards(p_loc + updates, self.axis)
+        return unravel(full[:size]), opt_state
+
+
+def zero_sharded_optimizer(opt, axis: str, n_shards: int):
+    """Wrap `opt` for ZeRO-2 execution over mesh axis `axis` (see
+    ZeROShardedOptimizer). The Trainer installs this on the agent's
+    optimizer whenever its DistPlan carries a `shard`-role axis."""
+    return ZeROShardedOptimizer(opt, axis, n_shards)
 
 
 def strip_worker_dim(tree, n: int = 1):

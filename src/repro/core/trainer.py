@@ -19,7 +19,14 @@ collective (§3) and sync discipline (§6):
   * elastic actors (ElegantRL-Podracer): `plan.actors` varies the env
     shard count between supersteps — agents only consume `traj`, so
     `fit` reshards the simulation carry host-side and the agents never
-    see the change.
+    see the change;
+  * sharded learner states (§5 memory ceiling, ZeRO-2): a `shard`-role
+    axis partitions the agent's optimizer state 1/N per device
+    (`topology.zero_sharded_optimizer`): gradients reduce-scatter over
+    the axis (the pmean half fuses into `grad_tx`), the per-coordinate
+    update runs on the local flattened slice, and params all-gather
+    before the next rollout — f32-bitwise the replicated plan, and a
+    size-1 shard axis is a bitwise no-op.
 
 `fit(fused=True)` scans `superstep` iterations (rollout -> learner_step
 -> lag-ring rotate) inside ONE jitted `lax.scan`: the Python loop
@@ -39,10 +46,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import agent as agent_api
+from repro.core.agent import flatten_and_pad
 from repro.core.distribution import DistPlan
 from repro.core.rollout import rollout
 from repro.core.topology import (replicate_for, restore_worker_dim,
-                                 strip_worker_dim)
+                                 strip_worker_dim, zero_sharded_optimizer)
 
 
 @dataclasses.dataclass
@@ -91,6 +99,24 @@ class Trainer:
                                     ring_size=cfg.ring_size,
                                     total_iters=cfg.iters,
                                     **cfg.algo_kwargs)
+        # ZeRO-2 learner-state sharding (shard-role axis): the agent's
+        # optimizer state lives 1/N per device over the shard axis; the
+        # wrapper reduce-scatters (pmean fused into grad_tx + local
+        # slice), updates the slice, and all-gathers params. A size-1
+        # shard axis is left unwrapped: sharding into one chunk is the
+        # identity, so the axis degenerates to a data axis and the
+        # bitwise no-op guarantee holds BY CONSTRUCTION (same program
+        # as the nested data-plan parity pinned in tests).
+        self.partition = None    # populated by _init_all when sharded
+        self._part_unravel = None
+        shard = plan.shard_axis
+        self._sharded = (shard is not None and shard.size > 1
+                         and plan.n_devices > 1)
+        if self._sharded and not hasattr(self.agent, "opt"):
+            raise ValueError(
+                f"algorithm {cfg.algo!r} exposes no `.opt` optimizer — "
+                f"required to execute the shard-role axis "
+                f"{shard.name!r} (ZeRO learner-state sharding)")
         self.mesh = None
         self._grad_tx = self._param_tx = None
         if plan.n_devices > 1:
@@ -98,6 +124,9 @@ class Trainer:
             # instead of silently slicing a too-short device list
             self.mesh = plan.build_mesh(jax.devices())
             self._grad_tx, self._param_tx = plan.compile_collectives()
+        if self._sharded:
+            self.agent.opt = zero_sharded_optimizer(
+                self.agent.opt, shard.name, shard.size)
         self._base_key = jax.random.PRNGKey(cfg.seed)
         self._step_cache = {}
         self.actor_shards = []   # actual env count per superstep dispatch
@@ -220,6 +249,19 @@ class Trainer:
         cfg = self.cfg
         k_init, k_env, k_delay = jax.random.split(self._base_key, 3)
         state = self.agent.init(k_init)
+        shard = self.plan.shard_axis
+        if self._sharded:
+            # record the flatten-and-pad partition of the optimizer
+            # target (agent.partition_spec) for reporting, benchmarks
+            # and the end-of-fit opt_state reassembly; padded size is
+            # divisible by the shard size by construction
+            vec, size, unravel = flatten_and_pad(
+                self.agent.partition_spec(state), shard.size)
+            self._part_unravel = unravel
+            self.partition = {
+                "axis": shard.name, "n_shards": shard.size,
+                "size": int(size), "padded": int(vec.size),
+                "chunk": int(vec.size // shard.size)}
         # simulation-side carry: batched env state + episode accounting
         # (ep_last starts NaN: no episode has finished yet)
         sim = {"env": self.env.reset_batch(k_env, cfg.n_envs),
@@ -313,5 +355,41 @@ class Trainer:
             start += k
         if self.mesh is not None:
             first = (0,) * len(self.plan.axes)
-            state = jax.tree_util.tree_map(lambda a: a[first], state)
+            take0 = lambda t: jax.tree_util.tree_map(
+                lambda a: a[first], t)
+            if self.partition is not None:
+                # checkpoint-shaped result: reassemble the ZeRO shards
+                # into the replicated-form opt_state before dropping
+                # the mesh dims (device 0 for everything else)
+                state = agent_api.TrainState(
+                    take0(state.params),
+                    self._unshard_opt_state(state.opt_state),
+                    take0(state.extra), take0(state.ring),
+                    take0(state.steps))
+            else:
+                state = take0(state)
         return state, history
+
+    def _unshard_opt_state(self, opt_state):
+        """Reassemble a ZeRO-sharded opt_state (leaves carrying one
+        leading mesh dim per axis) into the replicated tree form:
+        chunk-shaped leaves are gathered along the shard axis (row 0 of
+        every data axis), concatenated in shard order, trimmed of the
+        flatten-and-pad padding and unraveled back into the partition
+        target's pytree shape; other leaves (e.g. the step counter)
+        come from device 0. A shard axis of size 1 therefore returns
+        bitwise the replicated-trainer opt_state — checkpoints keep
+        their shape across plans."""
+        p = self.partition
+        nd = len(self.plan.axes)
+        k = self.plan.axis_names.index(p["axis"])
+
+        def leaf(a):
+            if a.shape[nd:] == (p["chunk"],):
+                idx = tuple(slice(None) if i == k else 0
+                            for i in range(nd))
+                return self._part_unravel(
+                    a[idx].reshape(-1)[:p["size"]])
+            return a[(0,) * nd]
+
+        return jax.tree_util.tree_map(leaf, opt_state)

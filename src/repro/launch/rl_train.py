@@ -12,10 +12,15 @@ the unified Agent/Trainer API (repro.core.agent / repro.core.trainer):
                                            cartpole-rand and wrapped
                                            variants like pendulum-norm)
   --plan      hierarchical DistPlan: comma-separated mesh axes,
-              outermost first, each ``name=size[:collective[:sync]]``
-              with collective in {ps, allreduce, gossip} (§3) and sync
-              in {bsp, asp, ssp} (§6), e.g.
-              ``hosts=2:allreduce:bsp,workers=4:gossip:asp``
+              outermost first, each
+              ``name=size[:collective[:sync[:role]]]`` with collective
+              in {ps, allreduce, gossip} (§3), sync in {bsp, asp, ssp}
+              (§6) and role in {data, shard} — ``shard`` marks the
+              ZeRO-2 learner-state sharding axis (optimizer state
+              partitioned 1/size per device, gradients reduce-
+              scattered, params all-gathered; allreduce only), e.g.
+              ``hosts=2:allreduce:bsp,workers=4:gossip:asp`` or
+              ``workers=4:allreduce:bsp,shard=2:allreduce:bsp:shard``
   --actors    elastic env-shard schedule, e.g. ``32,64,32`` — the total
               env count cycles through these values per superstep
               (ElegantRL-Podracer-style elastic actor shards)
@@ -54,14 +59,31 @@ SYNC_CHOICES = ("bsp", "asp", "ssp")
 
 def _plan_n_devices(spec: str) -> int:
     """Device count a --plan string needs — pure string math so it runs
-    before jax is imported (full validation happens in DistPlan.parse)."""
+    before jax is imported (full validation happens in DistPlan.parse).
+    Rejects empty specs, duplicate axis names and non-integer sizes
+    here too, naming the offending input, so the CLI errors cleanly
+    without ever paying the jax import."""
+    if not spec or not spec.strip():
+        raise ValueError("empty --plan: expected comma-separated axes "
+                         "name=size[:collective[:sync[:role]]]")
     n = 1
+    seen = []
     for seg in spec.split(","):
         head = seg.strip().split(":")[0]
         if "=" not in head:
             raise ValueError(f"bad plan axis {seg!r}: expected "
-                             f"name=size[:collective[:sync]]")
-        n *= int(head.split("=", 1)[1])
+                             f"name=size[:collective[:sync[:role]]]")
+        name, size = head.split("=", 1)
+        name = name.strip()
+        if name in seen:
+            raise ValueError(f"duplicate plan axis name {name!r} "
+                             f"in {spec!r}")
+        seen.append(name)
+        try:
+            n *= int(size)
+        except ValueError:
+            raise ValueError(f"bad plan axis {seg!r}: size {size!r} "
+                             f"is not an integer") from None
     return n
 
 
@@ -84,8 +106,13 @@ def build_parser():
     ap.add_argument("--plan", default=None, metavar="PLAN",
                     help="hierarchical DistPlan, comma-separated axes "
                          "outermost first, each name=size[:collective"
-                         "[:sync]] — overrides --n-workers/--topology/"
-                         "--sync (which lower onto a 1-D plan)")
+                         "[:sync[:role]]] — role `shard` marks the "
+                         "ZeRO-2 learner-state sharding axis (optimizer "
+                         "state lives 1/size per device; must use "
+                         "allreduce), e.g. 'workers=4:allreduce:bsp,"
+                         "shard=2:allreduce:bsp:shard'; overrides "
+                         "--n-workers/--topology/--sync (which lower "
+                         "onto a 1-D plan)")
     ap.add_argument("--actors", default=None, metavar="N,N,...",
                     help="elastic env-shard schedule: total env counts "
                          "cycled per superstep (each must divide across "
@@ -110,7 +137,9 @@ def main(argv=None):
     ap = build_parser()
     args = ap.parse_args(argv)
     try:
-        n_devices = (_plan_n_devices(args.plan) if args.plan
+        # `is not None`, not truthiness: --plan "" must be rejected as
+        # an empty axis list, never silently fall back to legacy flags
+        n_devices = (_plan_n_devices(args.plan) if args.plan is not None
                      else args.n_workers)
     except ValueError as e:
         ap.error(str(e))
@@ -144,7 +173,7 @@ def main(argv=None):
     try:
         actors = (tuple(int(n) for n in args.actors.split(","))
                   if args.actors else None)
-        if args.plan:
+        if args.plan is not None:
             plan = DistPlan.parse(args.plan, max_delay=args.max_delay,
                                   staleness_bound=args.staleness_bound,
                                   actors=actors)
@@ -171,6 +200,10 @@ def main(argv=None):
         "algo": args.algo, "env": args.env, "plan": plan.describe(),
         "n_devices": plan.n_devices, "fused": not args.unfused,
         "actor_shards": trainer.actor_shards[-5:],
+        # ZeRO partition of the learner state (shard-role axis): axis
+        # name, shard count and flat/padded/chunk element counts; None
+        # on unsharded (or size-1 shard) plans
+        "partition": trainer.partition,
         "wall_s": round(time.time() - t0, 1), "history": history[-5:]}))
 
 

@@ -15,6 +15,16 @@ import jax.numpy as jnp
 class Optimizer:
     init: Callable
     update: Callable  # (grads, state, params) -> (updates, new_state)
+    # Optional split of `update` for ZeRO-style sharded application
+    # (repro.core.topology.zero_sharded_optimizer): `pre` is the piece
+    # that must see the FULL gradient pytree (e.g. global-norm clipping
+    # — its norm over a 1/n shard would differ), `shard_update` the
+    # purely per-coordinate remainder, with the invariant
+    # ``update(g, s, p) == shard_update(pre(g), s, p)``. Both stay None
+    # for optimizers whose update is already per-coordinate (adamw /
+    # sgd / lion) — the shard wrapper then slices `update` directly.
+    pre: Optional[Callable] = None
+    shard_update: Optional[Callable] = None
 
     def apply(self, params, state, grads):
         updates, state = self.update(grads, state, params)
@@ -122,13 +132,22 @@ def lion(lr, b1=0.9, b2=0.99, weight_decay=0.0):
 
 
 def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
-    def update(grads, state, params):
+    def clip(grads):
         gn = global_norm(grads)
         scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
-        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
-        return opt.update(grads, state, params)
+        return jax.tree_util.tree_map(lambda g: g * scale, grads)
 
-    return Optimizer(opt.init, update)
+    # compose as pre/shard_update so a ZeRO shard wrapper can run the
+    # clip on the full gradients and only the inner per-coordinate
+    # update on the local slice; `update` is bitwise what it always was
+    inner_pre = opt.pre
+    pre = clip if inner_pre is None else (lambda g: inner_pre(clip(g)))
+    bare = opt.shard_update if opt.pre is not None else opt.update
+
+    def update(grads, state, params):
+        return bare(pre(grads), state, params)
+
+    return Optimizer(opt.init, update, pre=pre, shard_update=bare)
 
 
 def chain(opt: Optimizer, *wrappers) -> Optimizer:

@@ -1,0 +1,72 @@
+"""Bench-schema guard: every repo-root BENCH_*.json must parse against
+the repro-bench/v1 shape (benchmarks/common.validate_bench_json), so
+the machine-readable perf trajectory can't silently rot; plus the
+pinned headline of BENCH_zero.json — per-device opt_state bytes shrink
+~1/shard_size under the ZeRO shard axis."""
+import glob
+import json
+import os
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.abspath(REPO_ROOT))
+
+from benchmarks.common import SCHEMA, validate_bench_json  # noqa: E402
+
+BENCH_FILES = sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")))
+
+
+def test_bench_files_exist():
+    names = {os.path.basename(p) for p in BENCH_FILES}
+    # the committed trajectory: hot path (PR 3), topologies/sync (PR 4),
+    # learner sharding (PR 5)
+    assert {"BENCH_hotpath.json", "BENCH_topologies.json",
+            "BENCH_sync.json", "BENCH_zero.json"} <= names
+
+
+@pytest.mark.parametrize("path", BENCH_FILES,
+                         ids=[os.path.basename(p) for p in BENCH_FILES])
+def test_bench_json_matches_schema(path):
+    with open(path) as f:
+        doc = json.load(f)
+    validate_bench_json(doc)
+    assert doc["schema"] == SCHEMA
+    assert doc["rows"], f"{path} has no rows"
+
+
+def test_validate_bench_json_names_offending_input():
+    good = {"schema": SCHEMA, "benchmark": "x", "backend": "cpu",
+            "meta": {}, "rows": [{"name": "a", "us_per_call": 1.0,
+                                  "derived": "d"}]}
+    validate_bench_json(good)  # sanity: the good doc passes
+    for mutate, frag in [
+            (lambda d: d.update(schema="v2"), "schema"),
+            (lambda d: d.update(rows="nope"), "rows"),
+            (lambda d: d.update(meta=None), "meta"),
+            (lambda d: d["rows"].append({"name": 1}), "rows[1]"),
+            (lambda d: d["rows"][0].update(derived=7), "derived")]:
+        doc = json.loads(json.dumps(good))
+        mutate(doc)
+        with pytest.raises(ValueError) as e:
+            validate_bench_json(doc)
+        assert frag in str(e.value), (frag, str(e.value))
+
+
+def test_zero_bench_pins_opt_state_shrink():
+    """Acceptance: BENCH_zero.json records per-device opt_state live
+    bytes shrinking ~1/shard_size (within flatten-and-pad padding) for
+    the size-2 shard axis vs the replicated plan."""
+    with open(os.path.join(REPO_ROOT, "BENCH_zero.json")) as f:
+        doc = validate_bench_json(json.load(f))
+    row = {r["name"]: r["derived"] for r in doc["rows"]}
+    derived = row["zero2/opt_state_shrink"]
+    kv = dict(item.split("=", 1) for item in derived.split(";"))
+    n_shards = doc["meta"]["partition"]["n_shards"]
+    ratio = float(kv["ratio"])
+    # ~1/shard_size within padding (one padded f32 out of the chunk)
+    assert abs(ratio - 1.0 / n_shards) < 0.01, derived
+    assert kv["ideal"] == f"1/{n_shards}"
+    # and XLA's compiled live-bytes agree the sharded plan is smaller
+    assert int(kv["xla_live_saved_bytes"]) > 0, derived

@@ -1,7 +1,8 @@
 """Unified Agent/Trainer API under the Distribution Plan API: registry
 round-trip, fused-vs-unfused equivalence, the (collective x sync) smoke
 matrix as 1-D plans on a fake 4-device mesh, the hierarchical 2-D plan
-matrix on 8 fake devices (incl. flat-vs-nested bitwise parity), elastic
+matrix on 8 fake devices (incl. flat-vs-nested bitwise parity), the
+ZeRO shard-axis bitwise-parity matrix (all four algorithms), elastic
 actor shards, CLI contract, and the learning-sanity claims."""
 import json
 import os
@@ -15,7 +16,7 @@ import numpy as np
 import pytest
 
 from repro.core import agent as agent_api
-from repro.core.distribution import AxisSpec, DistPlan
+from repro.core.distribution import DistPlan
 from repro.core.trainer import Trainer, TrainerConfig
 from repro.envs import CartPole, GridWorld
 
@@ -113,85 +114,9 @@ def test_episode_accounting_exact_and_carried():
     assert float(ret) == pytest.approx(((4 + 1) + (9 + 1)) / 2)
 
 
-# ----------------------------------------------------- DistPlan schema
-def test_plan_defaults_to_flat_single_worker():
-    plan = DistPlan.flat()
-    assert plan.axis_names == ("workers",)
-    assert plan.mesh_shape == (1,)
-    assert plan.n_devices == 1 and plan.ring_extra == 0
-
-
-def test_plan_parse_round_trip():
-    s = "hosts=2:allreduce:bsp,workers=4:gossip:asp"
-    plan = DistPlan.parse(s, max_delay=3)
-    assert plan.axis_names == ("hosts", "workers")
-    assert plan.mesh_shape == (2, 4)
-    assert plan.axes[1].collective == "gossip"
-    assert plan.axes[1].sync == "asp"
-    assert plan.describe() == s
-    assert plan.ring_extra == 3  # bsp(0) + asp(max_delay=3)
-
-
-def test_plan_ring_extra_adds_across_axes():
-    plan = DistPlan(axes=(
-        AxisSpec("hosts", 2, sync="asp", max_delay=5),
-        AxisSpec("workers", 2, sync="ssp", max_delay=5,
-                 staleness_bound=2)))
-    assert plan.ring_extra == 5 + 2
-    cfg = TrainerConfig(plan=plan, policy_lag=1)
-    assert cfg.ring_size == 1 + 7 + 1
-
-
-def test_plan_delay_schedule_adds_per_axis():
-    plan = DistPlan(axes=(
-        AxisSpec("hosts", 2, sync="asp", max_delay=3),
-        AxisSpec("workers", 4, sync="bsp")))
-    d = plan.make_delay_schedule(10, jax.random.PRNGKey(0))
-    assert d.shape == (10, 2, 4)
-    # bsp inner axis adds nothing: delays constant across workers
-    np.testing.assert_array_equal(
-        np.asarray(d),
-        np.broadcast_to(np.asarray(d)[:, :, :1], d.shape))
-    assert int(d.max()) <= 3
-
-
-def test_plan_flat_delay_schedule_matches_legacy_sync():
-    """The 1-D plan consumes the key exactly as sync.make_delays did —
-    the legacy schedule is bitwise what the plan produces."""
-    from repro.core.sync import SyncConfig, make_delays
-    key = jax.random.PRNGKey(3)
-    plan = DistPlan.flat(4, sync="ssp", max_delay=6, staleness_bound=2)
-    legacy = make_delays(SyncConfig("ssp", 4, 6, 2), 20, key)
-    np.testing.assert_array_equal(
-        np.asarray(plan.make_delay_schedule(20, key)), np.asarray(legacy))
-
-
-def test_plan_validation_errors():
-    with pytest.raises(ValueError, match="collective"):
-        AxisSpec("workers", 2, collective="star")
-    with pytest.raises(ValueError, match="sync"):
-        AxisSpec("workers", 2, sync="eventual")
-    with pytest.raises(ValueError, match="duplicate"):
-        DistPlan(axes=(AxisSpec("w", 2), AxisSpec("w", 2)))
-    with pytest.raises(ValueError, match="actors"):
-        DistPlan.flat(1, actors=(4, 0))
-    with pytest.raises(ValueError, match="divide"):
-        Trainer(CartPole(), TrainerConfig(n_envs=6,
-                                          plan=DistPlan.flat(4)))
-    with pytest.raises(ValueError, match="actors"):
-        Trainer(CartPole(), TrainerConfig(
-            n_envs=8, plan=DistPlan.flat(4, actors=(8, 6))))
-
-
-def test_plan_device_validation_names_count_and_shape():
-    """Requesting a plan shape larger than the visible device count must
-    raise a clear error naming both — never silently slice devices."""
-    with pytest.raises(RuntimeError) as e:
-        Trainer(CartPole(), TrainerConfig(n_envs=64,
-                                          plan=DistPlan.flat(64)))
-    msg = str(e.value)
-    assert "64 devices" in msg and "workers=64" in msg
-    assert "xla_force_host_platform_device_count" in msg
+# (the DistPlan schema unit tests — parse round-trips incl. the shard
+# role grammar, validation errors, delay schedules — live in
+# tests/test_distribution.py)
 
 
 # ------------------------------------------- fused superstep equivalence
@@ -427,6 +352,109 @@ def test_plan_matrix_hierarchical_combos_train(plan_matrix_results):
         res = plan_matrix_results[combo]
         assert res["finite"], combo
         assert res["ret"] > 0, (combo, res)
+
+
+# ------------- ZeRO shard-axis bitwise parity (all four algorithms,
+# 8 fake devices): a size-1 shard axis is a no-op vs today's trainer,
+# and a size-2 sharded fit — after its in-step all-gather — matches the
+# flat replicated plan f32-bitwise. opt_state moments at size 2 may
+# drift by codegen ulps (FMA contraction differs between the vector-
+# chunk and tree-shaped programs) while the params they produce stay
+# bitwise, so size-2 pins params/ring/history and size-1 additionally
+# pins the (reassembled, tree-shaped) opt_state.
+_SHARD_PARITY_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, numpy as np
+    import repro.envs as envs
+    from repro.core.distribution import DistPlan
+    from repro.core.trainer import Trainer, TrainerConfig
+
+    env = envs.make("cartpole")
+    KW = {"a3c": {"hidden": (8,)}, "impala": {"hidden": (8,)},
+          "ppo": {"hidden": (8,)},
+          "dqn": {"hidden": (8,), "replay_capacity": 512, "warmup": 1}}
+
+    def fit(algo, plan):
+        cfg = TrainerConfig(algo=algo, iters=4, superstep=2, n_envs=8,
+                            unroll=6, plan=plan, log_every=1, seed=0,
+                            algo_kwargs=KW[algo])
+        return Trainer(env, cfg).fit()
+
+    def eq(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.shape != b.shape or a.dtype != b.dtype:
+            return False
+        if a.dtype.kind == "f":
+            return bool(np.array_equal(a, b, equal_nan=True))
+        return bool(np.array_equal(a, b))
+
+    def bitwise(t1, t2):
+        l1 = jax.tree_util.tree_leaves(t1)
+        l2 = jax.tree_util.tree_leaves(t2)
+        return len(l1) == len(l2) and all(eq(a, b)
+                                          for a, b in zip(l1, l2))
+
+    def hist_eq(h1, h2):
+        return len(h1) == len(h2) and all(
+            r1.keys() == r2.keys() and all(
+                np.array_equal(np.float64(r1[k]), np.float64(r2[k]),
+                               equal_nan=True) for k in r1)
+            for r1, r2 in zip(h1, h2))
+
+    out = {}
+    for algo in ("a3c", "dqn", "impala", "ppo"):
+        s4, h4 = fit(algo, DistPlan.flat(4))
+        s41, h41 = fit(algo, DistPlan.parse(
+            "workers=4:allreduce:bsp,shard=1:allreduce:bsp:shard"))
+        s8, h8 = fit(algo, DistPlan.flat(8))
+        s42, h42 = fit(algo, DistPlan.zero(4, 2))
+        out[algo] = {
+            "size1_params": bitwise(s4.params, s41.params),
+            "size1_opt": bitwise(s4.opt_state, s41.opt_state),
+            "size1_ring": bitwise(s4.ring, s41.ring),
+            "size1_hist": hist_eq(h4, h41),
+            "size2_params": bitwise(s8.params, s42.params),
+            "size2_ring": bitwise(s8.ring, s42.ring),
+            "size2_hist": hist_eq(h8, h42)}
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def shard_parity_results():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", _SHARD_PARITY_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_shard_axis_size1_is_bitwise_noop(shard_parity_results, algo):
+    """Acceptance: appending a size-1 shard axis to the flat 4-worker
+    plan trains bitwise-identically to today's trainer — params,
+    opt_state (tree-shaped, by the size-1 short-circuit), actor ring
+    and metric history all match exactly."""
+    res = shard_parity_results[algo]
+    for key in ("size1_params", "size1_opt", "size1_ring", "size1_hist"):
+        assert res[key], (algo, key, res)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_shard_axis_size2_matches_replicated_after_allgather(
+        shard_parity_results, algo):
+    """Acceptance: a (workers=4, shard=2) ZeRO plan — reduce-scatter,
+    1/2-slice optimizer update, all-gather — produces f32-bitwise the
+    params (and actor ring and history) of the flat replicated
+    8-worker plan on the same 8 devices."""
+    res = shard_parity_results[algo]
+    for key in ("size2_params", "size2_ring", "size2_hist"):
+        assert res[key], (algo, key, res)
 
 
 # -------------------------------------------------------- CLI contract
