@@ -1,0 +1,208 @@
+"""Actor-learner pipeline overlap benchmark (tentpole PR 6).
+
+Measures what the decoupled producer/consumer split (repro.core.pipeline
++ Trainer ``pipeline=`` mode) buys over running the same rollout and
+learner work serially, for ppo and dqn at queue depths 0/1/2:
+
+  1. ``fused``: the fused superstep program (rollout -> learner_step
+     inside one lax.scan, one dispatch per K iterations) — the PR 3
+     reference path;
+  2. ``serial``: the decoupled-but-UNpipelined actor-learner system —
+     per iteration, one learner-consumer dispatch
+     (``Trainer._consumer_program``) then one rollout-producer dispatch
+     (``Trainer._producer_program``), host-synced after each: exactly
+     what a Gorila-style split costs without overlap. Its rollout and
+     learn halves are timed separately, so ``serial = roll + learn``
+     by construction;
+  3. ``pipelined``: the combined K-tick program — queue pop, rollout of
+     iteration t+depth, push, learner update of iteration t, all in ONE
+     dispatch with the two halves left independent for the XLA
+     scheduler.
+
+The headline per-cell claim (pinned for depth >= 1 in
+tests/test_bench_schema.py) is ``pipelined < serial``:
+dispatch/boundary overhead is gone and, where the host has cores to
+spare, the producer subgraph executes concurrently with the consumer.
+
+  overlap_fraction = (roll + learn - pipelined) / min(roll, learn)
+
+i.e. the share of the cheaper phase's walltime that the pipeline hid
+(0 = fully serial, 1 = the cheaper phase entirely disappeared into the
+other's shadow; single-core hosts sit near the dispatch-overhead floor,
+multi-core hosts add true concurrency on top). Depth 0 (bsp) is the
+lockstep control: bitwise the fused path, so its row is the
+queue-machinery-is-free check, not an overlap claim.
+
+Always writes repo-root BENCH_pipeline.json (repro-bench/v1).
+
+Usage: python benchmarks/pipeline_overlap.py [--quick]
+"""
+import argparse
+import os
+import sys
+import time
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def _setup_path():
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), ".."))
+
+
+if __package__ is None or __package__ == "":
+    _setup_path()
+
+from benchmarks.common import emit, write_bench_json  # noqa: E402
+
+ALGOS = ("ppo", "dqn")
+DEPTHS = (0, 1, 2)
+
+
+def _make_trainer(algo, depth, k, n_envs, unroll):
+    import repro.envs as envs
+    from repro.core.distribution import DistPlan
+    from repro.core.trainer import Trainer, TrainerConfig
+
+    if depth == 0:
+        plan = DistPlan.flat(1)  # bsp -> lockstep
+    else:
+        plan = DistPlan.flat(1, sync="ssp", staleness_bound=depth,
+                             max_delay=depth)
+    cfg = TrainerConfig(algo=algo, iters=k, superstep=k, n_envs=n_envs,
+                        unroll=unroll, plan=plan, log_every=k,
+                        pipeline=True)
+    return Trainer(envs.make("cartpole"), cfg)
+
+
+def _fresh(tr, depth):
+    """(state, sim, queue) ready for one superstep: the queue pre-filled
+    with the `depth` in-flight trajectories steady state holds."""
+    state, sim, _ = tr._init_all()
+    queue = tr._init_queue(state, sim)
+    if depth:
+        fill = tr._producer_program(depth)
+        sim, queue = fill(state, sim, queue,
+                          jnp.arange(depth, dtype=jnp.int32),
+                          jnp.zeros((depth,), jnp.int32))
+    jax.block_until_ready((sim, queue))
+    return state, sim, queue
+
+
+def _measure(algo, depth, k, n_envs, unroll, reps):
+    tr = _make_trainer(algo, depth, k, n_envs, unroll)
+    its_k = jnp.arange(k, dtype=jnp.int32)
+    d_k = jnp.zeros((k,), jnp.int32)
+    d_1 = jnp.zeros((1,), jnp.int32)
+    fill1 = tr._producer_program(1)
+    drain1 = tr._consumer_program(1)
+    pipe = tr._pipeline_superstep(k)
+    fused = tr._superstep(k)
+
+    def one_it(i):
+        return jnp.arange(i, i + 1, dtype=jnp.int32)
+
+    def serial_superstep():
+        """Decoupled-unpipelined K iterations: alternate consumer and
+        producer dispatches (producer-first at depth 0 — lockstep has
+        nothing queued to consume yet). Returns the separately-timed
+        (roll, learn) walltimes."""
+        s, si, q = _fresh(tr, depth)
+        t_roll = t_learn = 0.0
+        for i in range(k):
+            if depth == 0:
+                t0 = time.perf_counter()
+                si, q = fill1(s, si, q, one_it(i), d_1)
+                jax.block_until_ready(q)
+                t_roll += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            s, si, q, m = drain1(s, si, q, one_it(i))
+            jax.block_until_ready(m)
+            t_learn += time.perf_counter() - t0
+            if depth:
+                t0 = time.perf_counter()
+                si, q = fill1(s, si, q, one_it(i + depth), d_1)
+                jax.block_until_ready(q)
+                t_roll += time.perf_counter() - t0
+        return t_roll, t_learn
+
+    def pipe_superstep():
+        s, si, q = _fresh(tr, depth)
+        t0 = time.perf_counter()
+        out = pipe(s, si, q, its_k, d_k)
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0
+
+    def fused_superstep():
+        s, si, delays = tr._init_all()
+        t0 = time.perf_counter()
+        out = fused(s, si, its_k, delays[:k])
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0
+
+    serial_superstep(); pipe_superstep(); fused_superstep()  # compile
+    rolls, learns, pipes, fuseds = [], [], [], []
+    for _ in range(reps):
+        r, l = serial_superstep()
+        rolls.append(r)
+        learns.append(l)
+        pipes.append(pipe_superstep())
+        fuseds.append(fused_superstep())
+    t_roll, t_learn = min(rolls), min(learns)
+    t_pipe, t_fused = min(pipes), min(fuseds)
+    overlap = (t_roll + t_learn - t_pipe) / min(t_roll, t_learn)
+    return {"algo": algo, "depth": depth,
+            "capacity": tr.pipeline_capacity,
+            "roll": t_roll, "learn": t_learn, "pipe": t_pipe,
+            "fused": t_fused, "overlap": overlap}
+
+
+def run(quick=False):
+    k = 4 if quick else 8
+    reps = 3 if quick else 6
+    n_envs, unroll = 128, 16
+    rows = []
+    cells = []
+    for algo in ALGOS:
+        for depth in DEPTHS:
+            c = _measure(algo, depth, k, n_envs, unroll, reps)
+            cells.append(c)
+            us = 1e6 / k
+            rows.append((
+                f"pipeline/{algo}_d{depth}", c["pipe"] * us,
+                f"depth={depth};capacity={c['capacity']};"
+                f"fused_us={c['fused'] * us:.1f};"
+                f"roll_us={c['roll'] * us:.1f};"
+                f"learn_us={c['learn'] * us:.1f};"
+                f"serial_sum_us={(c['roll'] + c['learn']) * us:.1f};"
+                f"pipe_us={c['pipe'] * us:.1f};"
+                f"overlap_fraction={c['overlap']:.4f}"))
+    # headline: every depth>=1 cell ran the pipelined superstep strictly
+    # under its serial rollout+learn sum (overlap_fraction > 0)
+    deep = [c for c in cells if c["depth"] >= 1]
+    worst = min(c["overlap"] for c in deep)
+    rows.append((
+        "pipeline/overlap_claim", None,
+        f"cells={len(deep)};"
+        f"all_below_serial={all(c['overlap'] > 0 for c in deep)};"
+        f"worst_overlap_fraction={worst:.4f}"))
+    emit(rows)
+    path = write_bench_json("pipeline", rows, quick=quick, k=k,
+                            n_envs=n_envs, unroll=unroll,
+                            algos=list(ALGOS), depths=list(DEPTHS))
+    print(f"# wrote {path}", file=sys.stderr)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes/reps (CI smoke)")
+    run(quick=ap.parse_args().quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,9 @@
 1. Train a reduced assigned-architecture LM for a few steps.
 2. Serve it with a KV cache.
 3. Run distributed DRL (IMPALA + V-trace) on the zero-copy CartPole,
-   resolved through the env registry (`envs.make("cartpole")`).
+   resolved through the env registry (`envs.make("cartpole")`) — then
+   the same run pipelined: rollout producer and learner consumer
+   decoupled by a device-resident trajectory queue.
 4. Run an ES generation (evolution-based training, survey §7) with the
    policy built from the env's spec (`MLPPolicy.for_spec`).
 """
@@ -44,6 +46,23 @@ trainer = Trainer(env, cfg)
 _, hist = trainer.fit()
 print("impala:", hist[-1], "plan:", plan.describe(),
       "actor_shards:", trainer.actor_shards)
+
+# ---- 3b. The same run, pipelined ------------------------------------------
+# pipeline=True decouples each iteration into a rollout producer and a
+# learner consumer joined by a device-resident trajectory queue
+# (repro.core.pipeline). The queue depth is whatever staleness the
+# plan's sync discipline admits: this ssp plan allows the producer to
+# run 1 iteration ahead of the learner; a bsp plan would pin depth 0
+# (lockstep — bitwise identical to the fused run above).
+pplan = DistPlan.flat(1, collective="allreduce", sync="ssp",
+                      staleness_bound=1, max_delay=1)
+pcfg = TrainerConfig(algo="impala", iters=40, superstep=10, n_envs=16,
+                     unroll=16, plan=pplan, log_every=10, pipeline=True)
+ptrainer = Trainer(env, pcfg)
+_, phist = ptrainer.fit()
+print("impala/pipelined:", phist[-1],
+      f"depth={ptrainer.pipeline_depth}",
+      f"queue_capacity={ptrainer.pipeline_capacity}")
 
 # ---- 4. Evolution strategies (survey §7) -----------------------------------
 from repro.core.networks import MLPPolicy

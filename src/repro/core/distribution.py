@@ -46,7 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sync import MECHANISMS, SyncConfig, make_delays
+from repro.core.sync import (MECHANISMS, SyncConfig, make_delays,
+                             pipeline_depth as _sync_pipeline_depth)
 from repro.core.topology import TOPOLOGIES, exchange_grads, gossip_mix
 
 _SYNC_EXTRA = {"bsp": lambda ax: 0,
@@ -99,6 +100,17 @@ class AxisSpec:
     def ring_extra(self) -> int:
         """Actor-ring depth this axis's sync discipline can reach into."""
         return _SYNC_EXTRA[self.sync](self)
+
+    @property
+    def pipeline_depth(self) -> int:
+        """Trajectory-queue depth this axis's sync discipline admits in
+        the Trainer's ``pipeline=`` mode (repro.core.sync.pipeline_depth):
+        bsp -> 0 (lockstep), ssp -> staleness_bound, asp -> max_delay.
+        Numerically the same staleness budget as `ring_extra` — the
+        fused path spends it as sampled policy lag, the pipelined path
+        as producer run-ahead."""
+        return _sync_pipeline_depth(SyncConfig(
+            self.sync, self.size, self.max_delay, self.staleness_bound))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -238,6 +250,16 @@ class DistPlan:
     def ring_extra(self) -> int:
         """Worst-case total extra staleness: per-axis delays add."""
         return sum(a.ring_extra for a in self.axes)
+
+    @property
+    def pipeline_depth(self) -> int:
+        """Trajectory-queue depth of the plan in the Trainer's
+        ``pipeline=`` mode: per-axis staleness budgets add, exactly as
+        the per-axis delay schedules add in the fused rendering. A pure
+        bsp plan has depth 0 — the pipelined superstep degenerates to
+        lockstep and stays bitwise the fused path (pinned in
+        tests/test_pipeline.py)."""
+        return sum(a.pipeline_depth for a in self.axes)
 
     @property
     def shard_axis(self) -> Optional[AxisSpec]:

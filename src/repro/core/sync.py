@@ -33,6 +33,28 @@ class SyncConfig:
     staleness_bound: int = 1      # SSP bound
 
 
+def pipeline_depth(cfg: SyncConfig) -> int:
+    """How far a decoupled rollout producer may run AHEAD of the
+    learner consumer under this sync discipline — the trajectory-queue
+    depth of the Trainer's ``pipeline=`` mode (repro.core.pipeline).
+
+    The mapping is the same staleness budget `make_delays` spends as
+    random policy-lag: BSP admits none (depth 0 = lockstep, bitwise the
+    fused path), SSP admits its bound, ASP its worst case. The fused
+    path *models* that staleness by reading lagged params out of the
+    actor ring; the pipelined path *realizes* it — a trajectory
+    consumed at iteration t was produced `depth` iterations earlier
+    with the params then newest, so the actor-param lag is structural
+    (exactly `depth`), not sampled."""
+    if cfg.mechanism == "bsp":
+        return 0
+    if cfg.mechanism == "asp":
+        return cfg.max_delay
+    if cfg.mechanism == "ssp":
+        return min(cfg.max_delay, cfg.staleness_bound)
+    raise ValueError(cfg.mechanism)
+
+
 def make_delays(cfg: SyncConfig, n_steps: int, key):
     if cfg.mechanism == "bsp":
         return jnp.zeros((n_steps, cfg.n_workers), jnp.int32)

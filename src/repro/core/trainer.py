@@ -35,6 +35,27 @@ instead of blocking on `float(...)` every iteration.  `fit(fused=False)`
 runs the identical iteration body one step at a time — numerically
 equivalent (tests/test_trainer.py) but host-bound; the speedup is
 measured in benchmarks/fused_superstep.py.
+
+**Pipelined mode** (`TrainerConfig.pipeline=True`, the survey §2
+actor/learner decoupling — Gorila/Ape-X, SRL's description/execution
+split): the superstep body is split at the trajectory seam into a
+rollout *producer* and a learner *consumer* joined by a fixed-capacity
+device-resident trajectory queue (repro.core.pipeline) riding in the
+carry. The queue depth is what the plan's per-axis sync discipline
+admits (`DistPlan.pipeline_depth`): bsp -> 0, ssp -> staleness_bound,
+asp -> max_delay. At depth 0 the tick degenerates to push-then-pop
+through one slot — lockstep, f32-bitwise the fused path (pinned in
+tests/test_pipeline.py). At depth >= 1 the producer runs `depth`
+iterations AHEAD: tick t pops the trajectory produced at tick t-depth
+(no data dependency on this tick's rollout) and produces the
+trajectory for iteration t+depth, so XLA's scheduler is free to
+execute simulation of iteration t+depth concurrently with the learner
+update of iteration t — the staleness the fused path only *models* as
+sampled policy-lag delays becomes real overlapped compute, with the
+actor-param ring supplying the lagged policy. Ticks are unrolled (not
+scanned): scan bodies execute serially, which would hide the
+producer/consumer independence from the scheduler. Walltime overlap is
+measured in benchmarks/pipeline_overlap.py -> BENCH_pipeline.json.
 """
 from __future__ import annotations
 
@@ -48,6 +69,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import agent as agent_api
 from repro.core.agent import flatten_and_pad
 from repro.core.distribution import DistPlan
+from repro.core.pipeline import queue_init, queue_pop, queue_push
 from repro.core.rollout import rollout
 from repro.core.topology import (replicate_for, restore_worker_dim,
                                  strip_worker_dim, zero_sharded_optimizer)
@@ -65,6 +87,7 @@ class TrainerConfig:
     seed: int = 0
     log_every: int = 10
     donate: bool = True        # zero-copy supersteps: donate state/sim
+    pipeline: bool = False     # decoupled actor-learner trajectory queue
     algo_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def resolved_plan(self) -> DistPlan:
@@ -92,6 +115,14 @@ class Trainer:
                 raise ValueError(
                     f"actors= schedule entries {bad} must divide evenly "
                     f"across the plan's {plan.n_devices} devices")
+        if cfg.pipeline and plan.actors is not None \
+                and len(set(plan.actors)) > 1:
+            raise ValueError(
+                f"pipeline=True cannot combine with a varying elastic "
+                f"actors= schedule {plan.actors}: the trajectory queue's "
+                f"buffer shape is fixed per compile, so in-flight "
+                f"trajectories cannot be resharded — use a constant "
+                f"schedule or fused mode")
         self.env = env
         self.cfg = cfg
         self.plan = plan
@@ -130,6 +161,17 @@ class Trainer:
         self._base_key = jax.random.PRNGKey(cfg.seed)
         self._step_cache = {}
         self.actor_shards = []   # actual env count per superstep dispatch
+        # trajectory-queue depth the plan's sync hierarchy admits for
+        # the decoupled actor-learner pipeline; 0 (lockstep) unless
+        # cfg.pipeline asks for the split superstep
+        self.pipeline_depth = plan.pipeline_depth if cfg.pipeline else 0
+
+    @property
+    def pipeline_capacity(self) -> Optional[int]:
+        """Ring capacity of the trajectory queue (None when fused):
+        steady state holds exactly `pipeline_depth` in-flight
+        trajectories; depth 0 still needs the one lockstep slot."""
+        return max(self.pipeline_depth, 1) if self.cfg.pipeline else None
 
     # ---- episode accounting (carried across iterations) --------------
     @staticmethod
@@ -157,30 +199,59 @@ class Trainer:
         ep_ret = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1), ep_last)
         return ep_run, ep_ret
 
-    # ---- one training iteration (shared by fused/unfused paths) ------
-    def _iteration(self, carry, xs):
-        state, sim = carry
-        it, delay = xs
+    # ---- producer/consumer halves (shared by fused + pipelined) ------
+    def _iter_key(self, it):
+        """(k_roll, k_learn) for iteration `it` — one deterministic
+        stream per iteration, independent of which program (fused tick,
+        producer, consumer) derives it, so the pipelined split consumes
+        randomness bitwise-identically to the fused scan."""
         key = jax.random.fold_in(self._base_key, it)
         if self.mesh is not None:
             # per-device RNG stream keyed by the FLAT device index, so a
             # (hosts, workers) nesting folds the same stream ids as the
             # flat plan (bitwise-parity invariant)
             key = jax.random.fold_in(key, self.plan.linear_index())
-        k_roll, k_learn = jax.random.split(key)
+        return jax.random.split(key)
+
+    def _produce(self, state, env_state, it, delay=None):
+        """Rollout-producer half: one trajectory for iteration `it`
+        plus its bootstrap observation (the queue item — boot_obs must
+        ride along because the consumer never sees the env state).
+        `delay` defaults to the deterministic policy-lag floor: in
+        pipelined mode the producer always acts with the newest params
+        available, and any extra staleness is structural (the queue
+        depth), not sampled."""
+        delay = self.cfg.policy_lag if delay is None else delay
+        k_roll, _ = self._iter_key(it)
         actor = self.agent.actor_policy(state, delay)
         traj, env_state = rollout(self.agent.policy, actor, self.env,
-                                  k_roll, sim["env"], self.cfg.unroll)
+                                  k_roll, env_state, self.cfg.unroll)
         boot_obs = jax.vmap(self.env.obs)(env_state)
+        return {"traj": traj, "boot": boot_obs}, env_state
+
+    def _consume(self, state, ep_run, ep_last, item, it):
+        """Learner-consumer half: one learner_step on a queue item plus
+        the episode accounting (which must see trajectories in
+        consumption order, so it lives on this side of the seam)."""
+        _, k_learn = self._iter_key(it)
         state, metrics = self.agent.learner_step(
-            state, traj, boot_obs, k_learn,
+            state, item["traj"], item["boot"], k_learn,
             grad_tx=self._grad_tx, param_tx=self._param_tx)
-        ep_run, ep_ret = self._episode_stats(sim["ep_run"],
-                                             sim["ep_last"], traj)
+        ep_run, ep_ret = self._episode_stats(ep_run, ep_last,
+                                             item["traj"])
         metrics = dict(metrics, episode_return=ep_ret)
         if self.mesh is not None:
             metrics = {k: jax.lax.pmean(v, self.plan.axis_names)
                        for k, v in metrics.items()}
+        return state, ep_run, ep_ret, metrics
+
+    # ---- one training iteration (shared by fused/unfused paths) ------
+    def _iteration(self, carry, xs):
+        state, sim = carry
+        it, delay = xs
+        item, env_state = self._produce(state, sim["env"], it, delay)
+        state, ep_run, ep_ret, metrics = self._consume(
+            state, sim["ep_run"], sim["ep_last"], item, it)
         sim = {"env": env_state, "ep_run": ep_run, "ep_last": ep_ret}
         return (state, sim), metrics
 
@@ -228,6 +299,241 @@ class Trainer:
                 donate_argnums=donate_argnums)
         self._step_cache[cache_key] = fn
         return fn
+
+    # ---- pipelined superstep: decoupled producer/consumer ------------
+    def _pipe_tick(self, state, sim, queue, it, delay):
+        """One pipelined tick for consumer iteration `it`.
+
+        depth 0: lockstep — push-then-pop through a one-slot queue is
+        the identity on the item stream, so the round-trip is compiled
+        away (the queue rides the carry untouched). This is not just an
+        optimization: the buffer write would force XLA to materialize
+        `traj` instead of fusing it into the consumer's reductions,
+        drifting ~1 ulp from the fused program and breaking the depth-0
+        bitwise guarantee (tests/test_pipeline.py pins it).
+
+        depth d >= 1: pop FIRST (the popped item — produced d ticks ago
+        — depends only on the carry-in queue, never on this tick's
+        rollout), then produce iteration `it + d` and push. The two
+        halves share only the carry-in `state`, so XLA schedules the
+        rollout of iteration it+d concurrently with the learner update
+        of iteration it; the tick's critical path is
+        max(t_produce, t_consume) instead of their sum."""
+        d = self.pipeline_depth
+        if d == 0:
+            item_c, env_state = self._produce(state, sim["env"], it,
+                                              delay)
+        else:
+            queue, item_c, _ = queue_pop(queue)
+            item_p, env_state = self._produce(state, sim["env"], it + d,
+                                              delay)
+            queue, _ = queue_push(queue, item_p)
+        state, ep_run, ep_ret, metrics = self._consume(
+            state, sim["ep_run"], sim["ep_last"], item_c, it)
+        sim = {"env": env_state, "ep_run": ep_run, "ep_last": ep_ret}
+        return state, sim, queue, metrics
+
+    def _pipeline_superstep(self, k: int, donate: bool = None):
+        """Jitted k-tick pipelined program (the consumer-side lowering;
+        the queue rides the carry and is donated with state/sim).
+
+        At depth >= 1 ticks are UNROLLED — a lax.scan body executes
+        serially under the XLA schedulers, which would hide the
+        producer/consumer independence `_pipe_tick` sets up. At depth 0
+        there is nothing to overlap (lockstep by definition), so ticks
+        run under lax.scan like the fused path: unrolling lets XLA fuse
+        across tick boundaries and drift ~1 ulp from the scanned
+        program, which would break the depth-0 bitwise guarantee."""
+        donate = self.cfg.donate if donate is None else donate
+        cache_key = ("pipe", k, donate)
+        if cache_key in self._step_cache:
+            return self._step_cache[cache_key]
+        donate_argnums = (0, 1, 2) if donate else ()
+
+        def body(state, sim, queue, its, delays):
+            if self.pipeline_depth == 0:
+                def tick(carry, xs):
+                    state, sim, queue = carry
+                    state, sim, queue, m = self._pipe_tick(
+                        state, sim, queue, *xs)
+                    return (state, sim, queue), m
+                (state, sim, queue), metrics = jax.lax.scan(
+                    tick, (state, sim, queue), (its, delays))
+                return state, sim, queue, metrics
+            per = []
+            for j in range(k):
+                state, sim, queue, m = self._pipe_tick(
+                    state, sim, queue, its[j], delays[j])
+                # fence the carry at tick boundaries: without it XLA
+                # fuses across ticks and a k-tick program drifts ~1 ulp
+                # from k dispatches of 1-tick programs (chunked fits
+                # stop being bitwise one-shot fits — the fence restores
+                # that for value-based learners; policy-gradient
+                # learners with internal epoch scans keep ~1-ulp chunk
+                # variance, pinned as allclose in tests). The fence adds
+                # no serialization the dataflow didn't already have —
+                # produce(t+1) reads consume(t)'s state — so the
+                # within-tick produce/consume independence survives.
+                state, sim, queue = jax.lax.optimization_barrier(
+                    (state, sim, queue))
+                per.append(m)
+            metrics = {key: jnp.stack([m[key] for m in per])
+                       for key in per[0]}
+            return state, sim, queue, metrics
+
+        if self.mesh is None:
+            fn = jax.jit(body, donate_argnums=donate_argnums)
+        else:
+            from jax.experimental.shard_map import shard_map
+            nd = len(self.plan.axes)
+
+            def worker(state, sim, queue, its, delays):
+                state, sim, queue, metrics = body(
+                    strip_worker_dim(state, nd),
+                    strip_worker_dim(sim, nd),
+                    strip_worker_dim(queue, nd), its,
+                    delays.reshape(delays.shape[0]))
+                return (restore_worker_dim(state, nd),
+                        restore_worker_dim(sim, nd),
+                        restore_worker_dim(queue, nd), metrics)
+
+            w = P(*self.plan.axis_names)
+            fn = jax.jit(shard_map(
+                worker, mesh=self.mesh,
+                in_specs=(w, w, w, P(), P(None, *self.plan.axis_names)),
+                out_specs=(w, w, w, P()), check_rep=False),
+                donate_argnums=donate_argnums)
+        self._step_cache[cache_key] = fn
+        return fn
+
+    def _producer_program(self, k: int):
+        """Jitted k-iteration rollout-only program (the producer-side
+        lowering): fills the queue with trajectories for iterations
+        its[0..k-1] before the first pipelined tick runs. `state` is
+        read-only here — the first tick still needs its buffers, so only
+        sim/queue are donated."""
+        cache_key = ("fill", k)
+        if cache_key in self._step_cache:
+            return self._step_cache[cache_key]
+        donate_argnums = (1, 2) if self.cfg.donate else ()
+
+        def body(state, sim, queue, its, delays):
+            env_state = sim["env"]
+            for j in range(k):
+                item, env_state = self._produce(state, env_state,
+                                                its[j], delays[j])
+                queue, _ = queue_push(queue, item)
+            sim = {"env": env_state, "ep_run": sim["ep_run"],
+                   "ep_last": sim["ep_last"]}
+            return sim, queue
+
+        if self.mesh is None:
+            fn = jax.jit(body, donate_argnums=donate_argnums)
+        else:
+            from jax.experimental.shard_map import shard_map
+            nd = len(self.plan.axes)
+
+            def worker(state, sim, queue, its, delays):
+                sim, queue = body(
+                    strip_worker_dim(state, nd),
+                    strip_worker_dim(sim, nd),
+                    strip_worker_dim(queue, nd), its,
+                    delays.reshape(delays.shape[0]))
+                return (restore_worker_dim(sim, nd),
+                        restore_worker_dim(queue, nd))
+
+            w = P(*self.plan.axis_names)
+            fn = jax.jit(shard_map(
+                worker, mesh=self.mesh,
+                in_specs=(w, w, w, P(), P(None, *self.plan.axis_names)),
+                out_specs=(w, w), check_rep=False),
+                donate_argnums=donate_argnums)
+        self._step_cache[cache_key] = fn
+        return fn
+
+    def _consumer_program(self, k: int):
+        """Jitted k-iteration learner-only program (the consumer-side
+        lowering): pops one queued trajectory per iteration and runs
+        learner_step + episode accounting on it. `fit` never calls this
+        — the pipelined tick fuses both halves — but it is the serial
+        half of the decoupled baseline benchmarks/pipeline_overlap.py
+        measures the pipelined program against, and the natural drain
+        primitive for a future multi-host split (ROADMAP)."""
+        cache_key = ("drain", k)
+        if cache_key in self._step_cache:
+            return self._step_cache[cache_key]
+        donate_argnums = (0, 1, 2) if self.cfg.donate else ()
+
+        def body(state, sim, queue, its):
+            ep_run, ep_last = sim["ep_run"], sim["ep_last"]
+            per = []
+            for j in range(k):
+                queue, item, _ = queue_pop(queue)
+                state, ep_run, ep_ret, m = self._consume(
+                    state, ep_run, ep_last, item, its[j])
+                ep_last = ep_ret
+                per.append(m)
+            metrics = {key: jnp.stack([m[key] for m in per])
+                       for key in per[0]}
+            sim = {"env": sim["env"], "ep_run": ep_run,
+                   "ep_last": ep_last}
+            return state, sim, queue, metrics
+
+        if self.mesh is None:
+            fn = jax.jit(body, donate_argnums=donate_argnums)
+        else:
+            from jax.experimental.shard_map import shard_map
+            nd = len(self.plan.axes)
+
+            def worker(state, sim, queue, its):
+                state, sim, queue, metrics = body(
+                    strip_worker_dim(state, nd),
+                    strip_worker_dim(sim, nd),
+                    strip_worker_dim(queue, nd), its)
+                return (restore_worker_dim(state, nd),
+                        restore_worker_dim(sim, nd),
+                        restore_worker_dim(queue, nd), metrics)
+
+            w = P(*self.plan.axis_names)
+            fn = jax.jit(shard_map(
+                worker, mesh=self.mesh,
+                in_specs=(w, w, w, P()),
+                out_specs=(w, w, w, P()), check_rep=False),
+                donate_argnums=donate_argnums)
+        self._step_cache[cache_key] = fn
+        return fn
+
+    def _init_queue(self, state, sim):
+        """Empty trajectory queue sized for `pipeline_capacity` items.
+
+        Item shapes come from a shape-only trace (eval_shape) of the
+        producer on PER-DEVICE inputs — a dedicated closure with a dummy
+        key, because `_iter_key` folds in `plan.linear_index()`
+        (axis_index), which only exists inside shard_map. Under a mesh
+        the queue leaves get the same leading mesh dims as state/sim so
+        one `P(*axis_names)` spec shards every carry argument alike."""
+        cap = self.pipeline_capacity
+        nd = 0 if self.mesh is None else len(self.plan.axes)
+        sds = lambda t: jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape[nd:], a.dtype), t)
+
+        def one_item(state, env_state):
+            actor = self.agent.actor_policy(state, self.cfg.policy_lag)
+            traj, env_state = rollout(
+                self.agent.policy, actor, self.env,
+                jax.random.PRNGKey(0), env_state, self.cfg.unroll)
+            return {"traj": traj,
+                    "boot": jax.vmap(self.env.obs)(env_state)}
+
+        item = jax.eval_shape(one_item, sds(state), sds(sim["env"]))
+        if self.mesh is None:
+            return queue_init(item, cap)
+        lead = self.plan.mesh_shape
+        buf = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(lead + (cap,) + tuple(s.shape), s.dtype),
+            item)
+        return {"buf": buf, "head": jnp.zeros(lead, jnp.int32),
+                "tail": jnp.zeros(lead, jnp.int32)}
 
     # ---- state/schedule construction ---------------------------------
     def _shard_sim(self, sim):
@@ -316,6 +622,17 @@ class Trainer:
         return self._superstep(k, donate).lower(state, sim, its,
                                                 delays[:k])
 
+    def lower_pipelined(self, k: int = None, donate: bool = None):
+        """Lower (without running) one pipelined superstep — the
+        consumer-side program with the trajectory queue in its carry."""
+        k = self.cfg.superstep if k is None else k
+        state, sim, delays = self._init_all()
+        queue = self._init_queue(state, sim)
+        its = jnp.arange(k, dtype=jnp.int32)
+        return self._pipeline_superstep(k, donate).lower(
+            state, sim, queue, its,
+            jnp.full_like(delays[:k], self.cfg.policy_lag))
+
     # ---- the driver --------------------------------------------------
     def fit(self, fused: bool = True):
         """Train for cfg.iters iterations. Returns (TrainState, history);
@@ -323,6 +640,26 @@ class Trainer:
         replica."""
         cfg = self.cfg
         state, sim, delays = self._init_all()
+        queue = None
+        if cfg.pipeline:
+            # the pipelined producer acts at the constant policy_lag
+            # floor — structural queue staleness replaces the sampled
+            # delay schedule — but the delay still enters the program
+            # as an INPUT so the ring read lowers to the same dynamic
+            # slice as the fused path (depth-0 bitwise guarantee)
+            delays = jnp.full_like(delays, cfg.policy_lag)
+            # prologue: fill the queue so the producer starts `depth`
+            # iterations ahead of the consumer. The queue then PERSISTS
+            # across superstep dispatches (no drain at chunk
+            # boundaries), so chunked fits equal one-shot fits. The
+            # producer over-runs by `depth` wasted rollouts at the tail
+            # — the price of a uniform tick program.
+            queue = self._init_queue(state, sim)
+            if self.pipeline_depth:
+                fill = self._producer_program(self.pipeline_depth)
+                its0 = jnp.arange(self.pipeline_depth, dtype=jnp.int32)
+                sim, queue = fill(state, sim, queue, its0,
+                                  delays[:self.pipeline_depth])
         K = cfg.superstep if fused else 1
         history = []
         start = 0
@@ -341,10 +678,15 @@ class Trainer:
                 sim, n_envs,
                 jax.random.fold_in(self._base_key, (1 << 20) + s_idx))
             self.actor_shards.append(n_envs)
-            step = self._superstep(k)
             its = jnp.arange(start, start + k, dtype=jnp.int32)
-            state, sim, metrics = step(state, sim, its,
-                                       delays[start:start + k])
+            if cfg.pipeline:
+                step = self._pipeline_superstep(k)
+                state, sim, queue, metrics = step(
+                    state, sim, queue, its, delays[start:start + k])
+            else:
+                step = self._superstep(k)
+                state, sim, metrics = step(state, sim, its,
+                                           delays[start:start + k])
             metrics = jax.device_get(metrics)  # ONE host sync per chunk
             for j in range(k):
                 it = start + j

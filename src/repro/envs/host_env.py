@@ -5,7 +5,22 @@ host — recreating the CPU-simulation pipeline where intermediate data is
 copied host<->device every iteration. Used ONLY by
 benchmarks/fig5_simulation.py to measure what zero-copy on-device
 simulation buys (survey §4.2); being a regular wrapper it composes with
-the rest of the stack and inherits the spec/registry plumbing for free.
+the rest of the stack and inherits the spec/registry plumbing for free
+(deliberately minus a registry name — it is a measurement harness, not
+an environment).
+
+Why this wrapper stays QUEUE-FREE while the trainer grew a pipelined
+mode (repro.core.pipeline): the trajectory queue decouples experience
+*generation* from *learning*, letting the producer run `depth`
+iterations ahead. It cannot decouple the env from *itself* — stepping
+is closed-loop (step t+1's input is step t's output), and here that
+loop detours through host memory every step. No queue depth can
+prefetch across that dependency; the host round-trip serializes the
+rollout from the inside. Under ``pipeline=True`` the wrapper therefore
+just executes inside the producer program, unchanged in numerics and
+un-hidden in cost (tests/test_pipeline.py pins both) — which is
+precisely what makes it the Fig. 5a baseline the pipelined/on-device
+paths are measured against.
 """
 import numpy as np
 

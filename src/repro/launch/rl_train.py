@@ -38,6 +38,11 @@ iterations of rollout -> learner_step -> lag-ring rotate execute inside
 one jitted ``lax.scan`` with a single host round-trip per dispatch;
 ``--unfused`` falls back to per-iteration dispatch (same numerics, for
 debugging and the benchmarks/fused_superstep.py comparison).
+``--pipeline`` decouples each iteration into a rollout producer and a
+learner consumer joined by a device-resident trajectory queue
+(repro.core.pipeline) whose depth is the staleness the plan's sync
+discipline admits — the output JSON reports the resolved depth and
+queue capacity.
 """
 from __future__ import annotations
 
@@ -130,6 +135,14 @@ def build_parser():
                     help="impala only: naive targets instead of V-trace")
     ap.add_argument("--unfused", action="store_true",
                     help="per-iteration dispatch instead of fused scan")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="decoupled actor-learner pipeline: split each "
+                         "iteration into a rollout producer and learner "
+                         "consumer joined by a device-resident "
+                         "trajectory queue; the queue depth is what the "
+                         "plan's per-axis sync discipline admits (bsp 0 "
+                         "= lockstep/bitwise-fused, ssp its bound, asp "
+                         "its max delay, summed over axes)")
     return ap
 
 
@@ -191,7 +204,8 @@ def main(argv=None):
         algo=args.algo, iters=args.iters, superstep=args.superstep,
         n_envs=args.n_envs, unroll=args.unroll, plan=plan,
         policy_lag=args.policy_lag, seed=args.seed,
-        log_every=args.log_every, algo_kwargs=algo_kwargs)
+        log_every=args.log_every, pipeline=args.pipeline,
+        algo_kwargs=algo_kwargs)
     env = envs.make(args.env)
     t0 = time.time()
     trainer = Trainer(env, cfg)
@@ -199,6 +213,11 @@ def main(argv=None):
     print(json.dumps({
         "algo": args.algo, "env": args.env, "plan": plan.describe(),
         "n_devices": plan.n_devices, "fused": not args.unfused,
+        # actor-learner pipeline: queue depth the plan's sync admits
+        # (0 = lockstep) and the ring capacity actually allocated
+        "pipeline": args.pipeline,
+        "pipeline_depth": trainer.pipeline_depth,
+        "pipeline_capacity": trainer.pipeline_capacity,
         "actor_shards": trainer.actor_shards[-5:],
         # ZeRO partition of the learner state (shard-role axis): axis
         # name, shard count and flat/padded/chunk element counts; None

@@ -21,9 +21,10 @@ BENCH_FILES = sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")))
 def test_bench_files_exist():
     names = {os.path.basename(p) for p in BENCH_FILES}
     # the committed trajectory: hot path (PR 3), topologies/sync (PR 4),
-    # learner sharding (PR 5)
+    # learner sharding (PR 5), actor-learner pipeline (PR 6)
     assert {"BENCH_hotpath.json", "BENCH_topologies.json",
-            "BENCH_sync.json", "BENCH_zero.json"} <= names
+            "BENCH_sync.json", "BENCH_zero.json",
+            "BENCH_pipeline.json"} <= names
 
 
 @pytest.mark.parametrize("path", BENCH_FILES,
@@ -70,3 +71,30 @@ def test_zero_bench_pins_opt_state_shrink():
     assert kv["ideal"] == f"1/{n_shards}"
     # and XLA's compiled live-bytes agree the sharded plan is smaller
     assert int(kv["xla_live_saved_bytes"]) > 0, derived
+
+
+def test_pipeline_bench_pins_overlap_claim():
+    """Acceptance: BENCH_pipeline.json records the pipelined superstep
+    running strictly under the decoupled-serial rollout+learn sum
+    (overlap_fraction > 0) for EVERY depth >= 1 cell — the reason the
+    trajectory queue exists. Holds for the committed full run and for
+    the --quick regeneration CI does before this test."""
+    with open(os.path.join(REPO_ROOT, "BENCH_pipeline.json")) as f:
+        doc = validate_bench_json(json.load(f))
+    rows = {r["name"]: r for r in doc["rows"]}
+
+    def kv(name):
+        return dict(item.split("=", 1)
+                    for item in rows[name]["derived"].split(";"))
+
+    deep = [n for n in rows
+            if n.startswith("pipeline/") and n[-2:] in ("d1", "d2")]
+    assert len(deep) >= 4, sorted(rows)  # {ppo,dqn} x depths {1,2}
+    for name in deep:
+        d = kv(name)
+        assert float(d["pipe_us"]) < float(d["serial_sum_us"]), (name, d)
+        assert float(d["overlap_fraction"]) > 0, (name, d)
+        assert int(d["capacity"]) == int(d["depth"]), (name, d)
+    claim = kv("pipeline/overlap_claim")
+    assert claim["all_below_serial"] == "True", claim
+    assert float(claim["worst_overlap_fraction"]) > 0, claim
