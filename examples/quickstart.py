@@ -8,7 +8,11 @@
    resolved through the env registry (`envs.make("cartpole")`) — then
    the same run pipelined: rollout producer and learner consumer
    decoupled by a device-resident trajectory queue.
-4. Run an ES generation (evolution-based training, survey §7) with the
+4. Serve the trained policy: bucketed micro-batching + versioned
+   zero-recompile hot-swap through repro.core.serving (see
+   examples/serve_policy_cartpole.py for the checkpoint-restore and
+   offered-load version).
+5. Run an ES generation (evolution-based training, survey §7) with the
    policy built from the env's spec (`MLPPolicy.for_spec`).
 """
 import jax
@@ -43,7 +47,7 @@ plan = DistPlan.flat(1, collective="allreduce", sync="bsp",
 cfg = TrainerConfig(algo="impala", iters=40, superstep=10, n_envs=16,
                     unroll=16, plan=plan, policy_lag=2, log_every=10)
 trainer = Trainer(env, cfg)
-_, hist = trainer.fit()
+state, hist = trainer.fit()
 print("impala:", hist[-1], "plan:", plan.describe(),
       "actor_shards:", trainer.actor_shards)
 
@@ -64,7 +68,30 @@ print("impala/pipelined:", phist[-1],
       f"depth={ptrainer.pipeline_depth}",
       f"queue_capacity={ptrainer.pipeline_capacity}")
 
-# ---- 4. Evolution strategies (survey §7) -----------------------------------
+# ---- 4. Serve the trained policy ------------------------------------------
+# The traffic-facing mirror of the Trainer: publish the live
+# actor-policy view into a versioned ParamStore, warm up one compiled
+# program per bucket size, and serve micro-batches padded to the
+# smallest fitting bucket. Hot-swapping fresh params is zero-recompile
+# by construction (params are traced inputs), pinned by compile_count.
+from repro.core.serving import ServeEngine
+
+engine = ServeEngine.for_agent(trainer.agent, env, buckets=(1, 4, 16))
+engine.store.publish_from_state(trainer.agent, state)
+engine.warmup()                      # one compile per bucket, up front
+obs = jax.vmap(env.spec.observation.sample)(
+    jax.random.split(jax.random.PRNGKey(2), 7))
+actions = engine.serve(obs)          # 7 requests -> buckets 16 (or 4+4...)
+c0 = engine.compile_count
+engine.store.publish_from_state(trainer.agent, state)   # hot-swap
+engine.serve(obs)
+print("serve_policy:", f"actions={actions.tolist()}",
+      f"version={engine.store.version}",
+      f"compiles={engine.compile_count} (was {c0} before hot-swap)",
+      f"stats={engine.stats}")
+assert engine.compile_count == c0    # the zero-recompile pin, live
+
+# ---- 5. Evolution strategies (survey §7) -----------------------------------
 from repro.core.networks import MLPPolicy
 from repro.core.evo import ES
 

@@ -1,1 +1,2 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint  # noqa: F401
+from repro.checkpoint.ckpt import (save_checkpoint,  # noqa: F401
+                                   load_checkpoint, load_train_state)

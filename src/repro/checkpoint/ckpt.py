@@ -28,6 +28,20 @@ def save_checkpoint(path, tree, step=None):
     return path
 
 
+def load_train_state(path, agent, example=None, key=None):
+    """Restore a Trainer-produced TrainState archive for an Agent —
+    the checkpoint half of the serving hot-swap path
+    (repro.core.serving.ParamStore.load_checkpoint). `example` defaults
+    to `agent.init(PRNGKey(0))`, so the agent must be constructed with
+    the same config (ring_size, replay capacity, ...) that produced the
+    checkpoint; pass an explicit example TrainState otherwise. Returns
+    `(state, step)`."""
+    if example is None:
+        example = agent.init(jax.random.PRNGKey(0) if key is None
+                             else key)
+    return load_checkpoint(path, example)
+
+
 def load_checkpoint(path, example_tree, shardings=None):
     """Restore into the structure of `example_tree`. `shardings` (same
     structure, optional) device_puts each leaf against its sharding."""

@@ -23,3 +23,5 @@ from repro.envs.gridworld import GridWorld  # noqa: F401
 from repro.core.agent import Agent, TrainState  # noqa: F401
 from repro.core.distribution import AxisSpec, DistPlan  # noqa: F401
 from repro.core.trainer import Trainer, TrainerConfig  # noqa: F401
+from repro.core.serving import (ParamStore, RequestBatcher,  # noqa: F401
+                                ServeEngine, bucket_for)

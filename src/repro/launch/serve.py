@@ -1,14 +1,26 @@
-"""Batched serving driver (actor side): prefill a batch of prompts, then
-step the decoder with a KV cache — the survey's SEED-style centralized
-inference path (§3.3: Learner-side inference, actors receive actions).
+"""Serving launchers (actor side) — two traffic surfaces, one module:
+
+  * **LM stub** (default): prefill a batch of prompts, then step the
+    decoder with a KV cache — the survey's SEED-style centralized
+    inference path (§3.3: learner-side inference, actors receive
+    actions). Compile time is excluded: a warmup prefill+decode runs
+    first (reported as `warmup_s`), so `prefill_s` and
+    `decode_tok_per_s` are steady-state numbers.
+
+  * **Policy serving** (`policy` subcommand): forwards to
+    repro.launch.serve_policy — the bucketed micro-batching /
+    hot-swap engine over repro.core.serving, with the offered-load
+    p50/p99 benchmark (BENCH_serve.json).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
       --batch 4 --prompt-len 32 --gen-len 16
+  PYTHONPATH=src python -m repro.launch.serve policy --algo ppo --quick
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
@@ -36,11 +48,22 @@ def serve(arch="smollm-360m", reduced=True, batch=4, prompt_len=32,
     prefill = jax.jit(lambda p, t, f: model.prefill(
         p, t, f, cache_capacity=prompt_len + gen_len))
     decode = jax.jit(model.decode_step)
+    n_prefix = cfg.frontend_tokens if cfg.frontend == "vision_stub" else 0
+
+    # warmup: compile prefill AND decode before anything is timed, so
+    # prefill_s / decode_tok_per_s are steady-state serving numbers
+    # (the compile cost is real but paid once — reported separately)
+    t0 = time.time()
+    logits_w, cache_w = prefill(params, prompts, fe)
+    tok_w = jnp.argmax(logits_w[:, -1], axis=-1)[:, None]
+    jax.block_until_ready(
+        decode(params, tok_w, cache_w, jnp.int32(prompt_len + n_prefix)))
+    t_warmup = time.time() - t0
 
     t0 = time.time()
     logits, cache = prefill(params, prompts, fe)
+    jax.block_until_ready(logits)
     t_prefill = time.time() - t0
-    n_prefix = cfg.frontend_tokens if cfg.frontend == "vision_stub" else 0
 
     tokens = []
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
@@ -59,20 +82,31 @@ def serve(arch="smollm-360m", reduced=True, batch=4, prompt_len=32,
     t_decode = time.time() - t0
     gen = jnp.concatenate(tokens, axis=1)
     return {"arch": arch, "batch": batch,
+            "warmup_s": round(t_warmup, 3),
             "prefill_s": round(t_prefill, 3),
             "decode_tok_per_s": round(batch * gen_len / t_decode, 1),
             "generated_shape": list(gen.shape),
             "sample": gen[0, :8].tolist()}
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if argv and argv[0] == "policy":
+        # bucketed micro-batching policy serving lives in its own
+        # launcher; this is the one front door for both surfaces
+        from repro.launch.serve_policy import main as policy_main
+        return policy_main(argv[1:])
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve",
+        description="LM-stub serving benchmark; use the `policy` "
+                    "subcommand for batched policy serving "
+                    "(repro.launch.serve_policy).")
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     print(json.dumps(serve(args.arch, args.reduced, args.batch,
                            args.prompt_len, args.gen_len)))
 

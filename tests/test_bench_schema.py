@@ -1,8 +1,10 @@
 """Bench-schema guard: every repo-root BENCH_*.json must parse against
 the repro-bench/v1 shape (benchmarks/common.validate_bench_json), so
 the machine-readable perf trajectory can't silently rot; plus the
-pinned headline of BENCH_zero.json — per-device opt_state bytes shrink
-~1/shard_size under the ZeRO shard axis."""
+pinned headlines: BENCH_zero.json (per-device opt_state bytes shrink
+~1/shard_size under the ZeRO shard axis), BENCH_pipeline.json (every
+pipelined depth beats decoupled-serial), and BENCH_serve.json (sane
+p50/p99 grid, zero recompiles after warmup across hot-swaps)."""
 import glob
 import json
 import os
@@ -21,10 +23,11 @@ BENCH_FILES = sorted(glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")))
 def test_bench_files_exist():
     names = {os.path.basename(p) for p in BENCH_FILES}
     # the committed trajectory: hot path (PR 3), topologies/sync (PR 4),
-    # learner sharding (PR 5), actor-learner pipeline (PR 6)
+    # learner sharding (PR 5), actor-learner pipeline (PR 6),
+    # policy serving (PR 7)
     assert {"BENCH_hotpath.json", "BENCH_topologies.json",
             "BENCH_sync.json", "BENCH_zero.json",
-            "BENCH_pipeline.json"} <= names
+            "BENCH_pipeline.json", "BENCH_serve.json"} <= names
 
 
 @pytest.mark.parametrize("path", BENCH_FILES,
@@ -98,3 +101,37 @@ def test_pipeline_bench_pins_overlap_claim():
     claim = kv("pipeline/overlap_claim")
     assert claim["all_below_serial"] == "True", claim
     assert float(claim["worst_overlap_fraction"]) > 0, claim
+
+
+def test_serve_bench_pins_latency_grid_and_flat_compiles():
+    """Acceptance: BENCH_serve.json covers a grid of >= 2 offered loads
+    x >= 2 bucket configurations, each cell reporting sane latency
+    percentiles (p99 > p50 > 0) and positive delivered throughput, and
+    the serve/compile_flat row pins zero recompiles after warmup with
+    at least one live hot-swap — holds for the committed full run and
+    for the --quick regeneration CI does before this test."""
+    with open(os.path.join(REPO_ROOT, "BENCH_serve.json")) as f:
+        doc = validate_bench_json(json.load(f))
+    rows = {r["name"]: r for r in doc["rows"]}
+
+    def kv(name):
+        return dict(item.split("=", 1)
+                    for item in rows[name]["derived"].split(";"))
+
+    cells = [n for n in rows if "/load" in n]
+    assert len(cells) >= 4, sorted(rows)
+    loads, configs = set(), set()
+    for name in cells:
+        d = kv(name)
+        # serve/<algo>/b<cfg>/load<rps>
+        configs.add(name.split("/")[2])
+        loads.add(float(d["offered_rps"]))
+        assert float(d["p99_ms"]) > float(d["p50_ms"]) > 0, (name, d)
+        assert float(d["throughput_rps"]) > 0, (name, d)
+        assert int(d["n"]) > 0, (name, d)
+    assert len(loads) >= 2, loads
+    assert len(configs) >= 2, configs
+    flat = kv("serve/compile_flat")
+    assert flat["recompiles_after_warmup"] == "0", flat
+    assert int(flat["warmup_compiles"]) > 0, flat
+    assert int(flat["hot_swaps"]) >= 1, flat

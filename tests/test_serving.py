@@ -1,0 +1,308 @@
+"""Policy serving subsystem (repro.core.serving + launch/serve_policy):
+ParamStore template/versioning units, bucket-grammar units, batcher
+FIFO fairness + never-dropping, the bucket-parity pin (padded
+bucket-of-B response bitwise equals per-request eval, for every
+registered env spec), zero-recompile hot-swap (compile-counter pinned),
+the checkpoint round trip (Trainer fit -> repro.checkpoint save ->
+ParamStore.load -> serve_step bitwise the live TrainState's
+actor_policy, all four algorithms), and the CLI contract for
+--load/--buckets."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.envs as envs
+from repro.checkpoint import save_checkpoint
+from repro.core.networks import MLPPolicy
+from repro.core.serving import (ParamStore, RequestBatcher, ServeEngine,
+                                bucket_for, validate_buckets)
+from repro.core.trainer import Trainer, TrainerConfig
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+ALGOS = ("a3c", "dqn", "impala", "ppo")
+
+
+def _mlp_engine(env_name="cartpole", buckets=(8,), seed=3, hidden=(16,)):
+    env = envs.make(env_name)
+    policy = MLPPolicy.for_spec(env.spec, hidden=hidden)
+    store = ParamStore()
+    store.publish(policy.init(jax.random.PRNGKey(0)))
+    return env, ServeEngine(policy, env.spec.observation,
+                            buckets=buckets, store=store, seed=seed)
+
+
+def _obs_rows(env, n, seed=7):
+    return jax.vmap(env.spec.observation.sample)(
+        jax.random.split(jax.random.PRNGKey(seed), n))
+
+
+# ------------------------------------------------------------ ParamStore
+def test_param_store_versions_are_monotonic():
+    store = ParamStore()
+    assert store.version == 0
+    p = {"w": jnp.ones((2, 2))}
+    assert store.publish(p) == 1
+    assert store.publish(p) == 2
+    v, got = store.get()
+    assert v == 2
+    np.testing.assert_array_equal(got["w"], p["w"])
+
+
+def test_param_store_empty_get_raises():
+    with pytest.raises(RuntimeError, match="publish"):
+        ParamStore().get()
+
+
+def test_param_store_rejects_shape_and_tree_drift():
+    store = ParamStore()
+    store.publish({"w": jnp.ones((2, 2)), "b": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match="recompile"):
+        store.publish({"w": jnp.ones((3, 2)), "b": jnp.zeros((2,))})
+    with pytest.raises(ValueError, match="treedef"):
+        store.publish({"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError, match="'w'"):
+        store.publish({"w": jnp.ones((2, 2), jnp.int32),
+                       "b": jnp.zeros((2,))})
+    # the failed publishes never became versions
+    assert store.version == 1
+
+
+def test_in_flight_snapshot_survives_publish():
+    """A dispatch reads (version, params) once; publishing mid-flight
+    must not change what the snapshot computes — params are immutable
+    traced inputs, pinned here bitwise."""
+    env, engine = _mlp_engine()
+    obs = _obs_rows(env, 3)
+    v1, p1 = engine.store.get()
+    before = engine.eval_bucket(list(obs), [0, 1, 2], 8, params=p1)
+    engine.store.publish(jax.tree_util.tree_map(lambda a: a * 2.0, p1))
+    after = engine.eval_bucket(list(obs), [0, 1, 2], 8, params=p1)
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert engine.store.version == v1 + 1
+
+
+# -------------------------------------------------------- bucket grammar
+def test_bucket_for_picks_smallest_fitting_bucket():
+    assert bucket_for(1, (4, 16)) == 4
+    assert bucket_for(4, (4, 16)) == 4
+    assert bucket_for(5, (4, 16)) == 16
+    assert bucket_for(16, (4, 16)) == 16
+    with pytest.raises(ValueError, match="largest bucket"):
+        bucket_for(17, (4, 16))
+    with pytest.raises(ValueError, match="empty"):
+        bucket_for(0, (4, 16))
+
+
+def test_validate_buckets_rejects_bad_grammars():
+    assert validate_buckets((1, 4, 16)) == (1, 4, 16)
+    for bad, frag in [((), "at least one"), ((0,), "positive"),
+                      ((4, 4), "increasing"), ((8, 2), "increasing")]:
+        with pytest.raises(ValueError, match=frag):
+            validate_buckets(bad)
+
+
+# ------------------------------------------------------- RequestBatcher
+def test_batcher_fifo_and_never_drops():
+    """37 requests through a cap-8 take loop: every id answered exactly
+    once, in submission order — backpressure queues, never drops."""
+    b = RequestBatcher()
+    ids = [b.submit(i) for i in range(37)]
+    assert ids == list(range(37))
+    seen = []
+    while len(b):
+        chunk = b.take(8)
+        assert len(chunk) <= 8
+        seen.extend(r["id"] for r in chunk)
+    assert seen == ids  # FIFO, all 37, no duplicates
+
+
+def test_batcher_take_respects_arrival_times():
+    b = RequestBatcher()
+    b.submit("a", arrival=1.0)
+    b.submit("b", arrival=5.0)
+    b.submit("c", arrival=2.0)  # behind b: FIFO order, not arrival sort
+    assert [r["obs"] for r in b.take(8, now=0.5)] == []
+    assert [r["obs"] for r in b.take(8, now=1.5)] == ["a"]
+    # "c" has arrived but FIFO means the not-yet-arrived "b" blocks it
+    assert [r["obs"] for r in b.take(8, now=2.5)] == []
+    assert [r["obs"] for r in b.take(8, now=6.0)] == ["b", "c"]
+    assert len(b) == 0
+
+
+def test_engine_fifo_fairness_under_bucketed_dispatch():
+    """End-to-end: responses complete in submission order and every
+    request is answered exactly once, whatever micro-batch splits the
+    bucket grammar produces."""
+    env, engine = _mlp_engine(buckets=(2, 4))
+    obs = _obs_rows(env, 11)
+    ids = [engine.submit(o) for o in obs]
+    order = [r["id"] for r in engine.drain()]
+    assert order == ids
+    assert sorted(engine.results) == ids
+
+
+# ------------------------------------------------------- bucket parity
+@pytest.mark.parametrize("name", envs.available())
+def test_bucket_parity_per_request_bitwise(name):
+    """The pad-to-bucket pin, per registered env spec: row i of a
+    padded bucket-of-B dispatch is bitwise row i of a per-request
+    (single-request, same-bucket) dispatch — a response never depends
+    on which other requests shared the micro-batch."""
+    env = envs.make(name)
+    policy = MLPPolicy.for_spec(env.spec, hidden=(16,))
+    store = ParamStore()
+    store.publish(policy.init(jax.random.PRNGKey(0)))
+    engine = ServeEngine(policy, env.spec.observation, buckets=(8,),
+                         store=store, seed=3)
+    obs = _obs_rows(env, 6)
+    a_b, l_b, v_b = engine.eval_bucket(list(obs), list(range(6)), 8)
+    for i in range(6):
+        a_1, l_1, v_1 = engine.eval_bucket([obs[i]], [i], 8)
+        np.testing.assert_array_equal(np.asarray(a_b[i]),
+                                      np.asarray(a_1[0]))
+        np.testing.assert_array_equal(np.asarray(l_b[i]),
+                                      np.asarray(l_1[0]))
+        np.testing.assert_array_equal(np.asarray(v_b[i]),
+                                      np.asarray(v_1[0]))
+
+
+# -------------------------------------------- zero-recompile hot swap
+def test_hot_swap_and_batch_size_variation_never_recompile():
+    """After warmup, serving arbitrary batch sizes and hot-swapping
+    params leaves the compile counter flat — pad-to-bucket keeps shapes
+    static and params are traced inputs."""
+    env, engine = _mlp_engine(buckets=(2, 4))
+    assert engine.warmup() == 2          # one compile per bucket
+    c0 = engine.compile_count
+    obs = _obs_rows(env, 9)
+    for n in (1, 2, 3, 4):               # both buckets, varying n_valid
+        for o in obs[:n]:
+            engine.submit(o)
+        engine.drain()
+    assert engine.compile_count == c0
+    _, p1 = engine.store.get()
+    out1 = engine.eval_bucket(list(obs[:3]), [0, 1, 2], 4)
+    # hot-swap: same shapes, new values -> new outputs, zero compiles
+    engine.store.publish(
+        jax.tree_util.tree_map(lambda a: a * 1.5, p1))
+    out2 = engine.eval_bucket(list(obs[:3]), [0, 1, 2], 4)
+    assert engine.compile_count == c0
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(out1[1:], out2[1:]))  # logp/value moved
+
+
+def test_responses_are_tagged_with_dispatch_version():
+    env, engine = _mlp_engine(buckets=(4,))
+    engine.warmup()
+    obs = _obs_rows(env, 4)
+    engine.submit(obs[0])
+    (r1,) = engine.step()
+    _, p = engine.store.get()
+    v2 = engine.store.publish(jax.tree_util.tree_map(
+        lambda a: a + 1e-3, p))
+    engine.submit(obs[1])
+    (r2,) = engine.step()
+    assert r1["version"] == v2 - 1
+    assert r2["version"] == v2
+
+
+# --------------------------------------------- checkpoint round trip
+@pytest.mark.parametrize("algo", ALGOS)
+def test_checkpoint_roundtrip_bitwise(algo, tmp_path):
+    """Trainer fit -> checkpoint save -> ParamStore.load ->
+    serve_step == serving agent.actor_policy on the live TrainState,
+    bitwise, for every algorithm (for DQN that includes the annealed
+    exploration rate riding the restored step counter)."""
+    env = envs.make("cartpole")
+    kw = {"hidden": (16,)}
+    if algo == "dqn":
+        kw["replay_capacity"] = 512
+    cfg = TrainerConfig(algo=algo, iters=4, superstep=2, n_envs=8,
+                        unroll=8, seed=0, log_every=2, algo_kwargs=kw)
+    trainer = Trainer(env, cfg)
+    state, _ = trainer.fit()
+    path = save_checkpoint(str(tmp_path / f"{algo}.npz"), state)
+
+    live = ParamStore()
+    live.publish_from_state(trainer.agent, state)
+    restored = ParamStore()
+    restored.load_checkpoint(path, trainer.agent)
+
+    obs = _obs_rows(env, 5)
+    outs = []
+    for store in (live, restored):
+        engine = ServeEngine(trainer.agent.policy, env.spec.observation,
+                             buckets=(8,), store=store, seed=11)
+        outs.append(engine.eval_bucket(list(obs), list(range(5)), 8))
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------- CLI contract
+def test_cli_load_buckets_contract(tmp_path):
+    """serve_policy honors --load/--buckets, reports the zero-recompile
+    pin, and (always) writes a schema-valid BENCH_serve.json with one
+    row per load x bucket-config cell."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_policy", "--quick",
+         "--algo", "ppo", "--load", "400,1600", "--buckets", "2,8;8",
+         "--requests", "80", "--train-iters", "2"],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+        env=dict(os.environ, PYTHONPATH=SRC), timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["loads"] == [400.0, 1600.0]
+    assert out["bucket_configs"] == [[2, 8], [8]]
+    assert out["recompiles_after_warmup"] == 0
+    assert out["warmup_compiles"] == 3    # 2 buckets + 1 bucket
+    assert out["hot_swaps"] == 4          # one per cell
+    assert len(out["cells"]) == 4
+    for cell in out["cells"]:
+        assert cell["n"] == 80
+        assert cell["p99_ms"] > cell["p50_ms"] > 0
+        assert cell["versions"] >= 2      # the mid-cell hot swap served
+    doc = json.load(open(os.path.join(REPO_ROOT, "BENCH_serve.json")))
+    sys.path.insert(0, REPO_ROOT)
+    from benchmarks.common import validate_bench_json
+    validate_bench_json(doc)
+    names = [row["name"] for row in doc["rows"]]
+    assert "serve/compile_flat" in names
+    assert sum(1 for n in names if "/load" in n) == 4
+
+
+def test_cli_rejects_malformed_load_and_buckets():
+    for flags in (["--load", "0"], ["--load", "abc"],
+                  ["--buckets", "4,2"], ["--buckets", ";"],
+                  ["--buckets", "x,y"]):
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve_policy"] + flags,
+            capture_output=True, text=True, cwd=REPO_ROOT,
+            env=dict(os.environ, PYTHONPATH=SRC), timeout=120)
+        assert r.returncode != 0, flags
+        assert "usage" in r.stderr or "error" in r.stderr, flags
+
+
+def test_serve_front_door_delegates_policy_subcommand():
+    """launch/serve.py is the one front door: `serve policy ...` runs
+    the policy-serving launcher."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "policy",
+         "--quick", "--requests", "40", "--train-iters", "0"],
+        capture_output=True, text=True, cwd=REPO_ROOT,
+        env=dict(os.environ, PYTHONPATH=SRC), timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    # --quick defaults: loads 500,2000 over bucket configs (4,16);(16)
+    # — the same grid the CI smoke regenerates, so the BENCH_serve.json
+    # this leaves behind always satisfies the schema pins
+    assert out["bucket_configs"] == [[4, 16], [16]]
+    assert out["loads"] == [500.0, 2000.0]
+    assert out["recompiles_after_warmup"] == 0
