@@ -186,11 +186,14 @@ def main(argv=None):
     if args.ckpt is not None:
         store.load_checkpoint(args.ckpt, trainer.agent)
         train_s = 0.0
+        source = "checkpoint"
     else:
         state, _ = trainer.fit() if args.train_iters > 0 else \
             (trainer.agent.init(jax.random.PRNGKey(args.seed)), None)
         store.publish_from_state(trainer.agent, state)
         train_s = time.time() - t0
+        source = "trained-in-process" if args.train_iters > 0 \
+            else "fresh-init"
     # the hot-swap payload: same shapes (template-validated), fresh
     # values — published mid-cell to prove live traffic never recompiles
     _, base_params = store.get()
@@ -238,8 +241,7 @@ def main(argv=None):
         loads=list(loads),
         bucket_configs=[list(c) for c in configs],
         requests_per_cell=args.requests, quick=args.quick,
-        train_iters=args.train_iters,
-        source="checkpoint" if args.ckpt else "trained-in-process")
+        train_iters=args.train_iters, source=source)
     print(json.dumps({
         "algo": args.algo, "env": args.env, "loads": list(loads),
         "bucket_configs": [list(c) for c in configs],
