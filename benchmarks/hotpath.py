@@ -10,7 +10,12 @@ BENCH_hotpath.json (repro-bench/v1 schema):
   3. zero-copy supersteps: the DQN Trainer superstep (replay_capacity
      >= 20k) with donate_argnums on vs off — walltime per superstep and
      peak live bytes from XLA's compiled memory analysis (argument +
-     output + temp − donated-alias).
+     output + temp − donated-alias);
+  4. attention (PR 8): the transformer-trunk policy's attention seam —
+     a naive jnp full-softmax (materializes the (S, S) score matrix) vs
+     the core/attention.py dispatcher's ref path vs the Pallas
+     flash-attention kernel, all in the trunk's (B, S, KVH, G, D)
+     grouped-query layout.
 
 Off-TPU the Pallas kernels execute in interpret mode (meta records it)
 — their timings track the trajectory, not peak speed; the donation and
@@ -113,6 +118,46 @@ def _replay_rows(quick):
     ]
 
 
+def _naive_attention(qg, k, v, causal=True):
+    """Full-softmax attention in the (B, S, KVH, G, D) grouped-query
+    layout — the O(S^2)-memory baseline the flash kernel replaces."""
+    B, S, KVH, G, D = qg.shape
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return o.astype(qg.dtype)
+
+
+def _attention_rows(quick):
+    from repro.core.attention import attention
+    from repro.kernels.flash_attention.ops import flash_attention
+    B, S, KVH, G, D = (2, 128, 2, 2, 32) if quick else (2, 256, 2, 2, 64)
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    qg = jax.random.normal(ks[0], (B, S, KVH, G, D))
+    k = jax.random.normal(ks[1], (B, S, KVH, D))
+    v = jax.random.normal(ks[2], (B, S, KVH, D))
+    iters = 3 if quick else 10
+    shape = f"B={B};S={S};KVH={KVH};G={G};D={D};causal"
+    f_naive = jax.jit(_naive_attention)
+    f_ref = jax.jit(lambda q, kk, vv: attention(q, kk, vv, causal=True,
+                                                use_kernel=False))
+    f_kern = jax.jit(lambda q, kk, vv: flash_attention(q, kk, vv,
+                                                       causal=True))
+    us_naive = time_fn(f_naive, qg, k, v, warmup=2, iters=iters)
+    us_ref = time_fn(f_ref, qg, k, v, warmup=2, iters=iters)
+    us_kern = time_fn(f_kern, qg, k, v, warmup=2, iters=iters)
+    return [
+        ("attention/naive_jnp", us_naive, shape + ";full_softmax"),
+        ("attention/flash_ref", us_ref, shape + ";dispatcher_ref"),
+        ("attention/flash_kernel", us_kern,
+         f"{shape};interpret={interpret_mode()}"),
+    ]
+
+
 def _bytes(trainer, k, donate):
     ma = trainer.lower(k, donate=donate).compile().memory_analysis()
     alias = ma.alias_size_in_bytes
@@ -163,7 +208,7 @@ def _superstep_rows(quick):
 
 def run(quick=False):
     rows = (_advantage_rows(quick) + _replay_rows(quick)
-            + _superstep_rows(quick))
+            + _attention_rows(quick) + _superstep_rows(quick))
     emit(rows)
     path = write_bench_json("hotpath", rows, quick=quick,
                             interpret_kernels=interpret_mode())

@@ -1,25 +1,37 @@
-"""ZeRO-style learner-state sharding benchmark (tentpole PR 5).
+"""ZeRO-style learner-state sharding benchmark (tentpole PR 5 + PR 8).
 
 Measures the per-device memory footprint of the learner state under a
 replicated DistPlan vs a `shard`-role axis (ZeRO-2: optimizer state
 partitioned 1/N per device, gradients reduce-scattered, params
-all-gathered before the next rollout):
+all-gathered before the next rollout) and vs a `zero3`-role axis
+(full ZeRO-3: params stored sharded too, all-gathered per use inside
+learner_step/actor_policy) on the transformer policy trunk:
 
   1. exact pytree accounting: per-device bytes of `TrainState.params`
      and `opt_state` straight off the initialized, mesh-laid-out state
      (replicated plans carry the full adamw m/v per device; sharded
      plans carry one 1/N flattened chunk);
-  2. XLA ground truth: live bytes (argument + output + temp − donated
-     alias) of the compiled superstep from
-     `Trainer.lower(k).compile().memory_analysis()`;
+  2. XLA ground truth from `Trainer.lower(k).compile()
+     .memory_analysis()`: argument bytes (the persistent state the
+     program carries between supersteps — where learner-state sharding
+     shows up directly) and live bytes (argument + output + temp −
+     donated alias; for ZeRO-3 the transient gather-per-use buffers
+     land in temp, offsetting the argument saving at small shard
+     counts);
   3. walltime per superstep for both plans (the all-gather cost the
      memory saving buys).
 
-The headline row `zero2/opt_state_shrink` pins the acceptance claim:
+The headline row `zero2/opt_state_shrink` pins PR 5's acceptance claim:
 per-device opt_state bytes shrink ~1/shard_size (within flatten-and-pad
-padding) for the sharded plan. Always writes repo-root BENCH_zero.json
-(repro-bench/v1) — the perf trajectory for learner sharding starts
-there.
+padding) for the sharded plan. `zero3/param_state_shrink` pins PR 8's:
+per-device params+opt_state bytes ratio <= 0.67 vs replicated at 2
+shards on the transformer trunk (adamw: 3P replicated -> 1.5P at n=2,
+ideal 0.5), with XLA argument bytes corroborating the persistent-state
+shrink (live bytes are also recorded: gather-per-use trades transient
+temp bytes for the persistent saving, so the live delta can go either
+way at n=2). Always writes repo-root
+BENCH_zero.json (repro-bench/v1) — the perf trajectory for learner
+sharding starts there.
 
 Usage: python benchmarks/zero_shard.py [--quick]
 """
@@ -63,19 +75,21 @@ def _per_device_bytes(tree, n_devices):
                ) // n_devices
 
 
-def _live_bytes(trainer, k):
+def _xla_bytes(trainer, k):
     ma = trainer.lower(k).compile().memory_analysis()
-    return (ma.argument_size_in_bytes + ma.output_size_in_bytes
+    live = (ma.argument_size_in_bytes + ma.output_size_in_bytes
             + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return live, ma.argument_size_in_bytes
 
 
-def _measure(env, plan, label, quick, hidden):
+def _measure(env, plan, label, quick, hidden, algo_kwargs=None):
     from repro.core.trainer import Trainer, TrainerConfig
     K = 2 if quick else 4
     reps = 2 if quick else 5
     cfg = TrainerConfig(algo="impala", iters=K, superstep=K, n_envs=8,
                         unroll=8, plan=plan, log_every=K,
-                        algo_kwargs={"hidden": hidden})
+                        algo_kwargs=algo_kwargs if algo_kwargs is not None
+                        else {"hidden": hidden})
     tr = Trainer(env, cfg)
     state, sim, delays = tr._init_all()
     nd = plan.n_devices
@@ -90,10 +104,11 @@ def _measure(env, plan, label, quick, hidden):
         state, sim, m = step(state, sim, its, delays[:K])
     jax.block_until_ready(m)
     wall = (time.perf_counter() - t0) / reps
-    live = _live_bytes(tr, K)
+    live, arg_b = _xla_bytes(tr, K)
     return {"label": label, "plan": plan.describe(),
             "params_b": params_b, "opt_b": opt_b, "wall": wall,
-            "live": live, "K": K, "partition": tr.partition}
+            "live": live, "arg_b": arg_b, "K": K,
+            "partition": tr.partition}
 
 
 def run(quick=False):
@@ -124,10 +139,38 @@ def run(quick=False):
         f"ratio={shrink:.4f};ideal=1/{n_shards};padding_bytes={pad_b};"
         f"params_plus_opt_ratio={total_shrink:.4f};"
         f"xla_live_saved_bytes={rep['live'] - shd['live']}"))
+
+    # ZeRO-3 on the transformer trunk (PR 8): params stored sharded too
+    tk = {"policy": "trunk", "trunk_kwargs": {"reduced": quick}}
+    rep3 = _measure(env, DistPlan.flat(N_DEVICES), "replicated_trunk",
+                    quick, None, algo_kwargs=tk)
+    z3 = _measure(env, DistPlan.zero3(N_DEVICES // 2, 2), "zero3_trunk",
+                  quick, None, algo_kwargs=tk)
+    for r in (rep3, z3):
+        rows.append((
+            f"zero_shard/{r['label']}", r["wall"] / r["K"] * 1e6,
+            f"plan={r['plan']};params_per_device_bytes={r['params_b']};"
+            f"opt_state_per_device_bytes={r['opt_b']};"
+            f"state_per_device_bytes={r['params_b'] + r['opt_b']};"
+            f"xla_live_bytes={r['live']};xla_arg_bytes={r['arg_b']};"
+            f"K={r['K']}"))
+    n3 = z3["partition"]["n_shards"]
+    pad3 = 4 * (z3["partition"]["padded"] - z3["partition"]["size"])
+    ratio3 = ((z3["params_b"] + z3["opt_b"])
+              / max(rep3["params_b"] + rep3["opt_b"], 1))
+    rows.append((
+        "zero3/param_state_shrink", None,
+        f"ratio={ratio3:.4f};threshold=0.67;ideal=0.5;"
+        f"params_ratio={z3['params_b'] / max(rep3['params_b'], 1):.4f};"
+        f"opt_ratio={z3['opt_b'] / max(rep3['opt_b'], 1):.4f};"
+        f"n_shards={n3};padding_bytes={pad3};"
+        f"xla_arg_saved_bytes={rep3['arg_b'] - z3['arg_b']};"
+        f"xla_live_saved_bytes={rep3['live'] - z3['live']}"))
     emit(rows)
     path = write_bench_json("zero", rows, quick=quick,
                             n_devices=N_DEVICES,
-                            partition=shd["partition"])
+                            partition=shd["partition"],
+                            partition_zero3=z3["partition"])
     print(f"# wrote {path}", file=sys.stderr)
     return rows
 

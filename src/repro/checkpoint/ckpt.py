@@ -39,6 +39,10 @@ def load_train_state(path, agent, example=None, key=None):
     if example is None:
         example = agent.init(jax.random.PRNGKey(0) if key is None
                              else key)
+    # a ZeRO-3 agent (topology.ZeRO3Agent) inits in its sharded wrapper
+    # form; checkpoints are written in the reassembled (plan-independent)
+    # tree shape `fit` returns, so reassemble the template to match
+    example = getattr(agent, "host_state", lambda s: s)(example)
     return load_checkpoint(path, example)
 
 

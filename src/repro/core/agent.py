@@ -100,6 +100,15 @@ class Agent:
         targets a subtree (see DQNAgent: only the online net)."""
         return state.params
 
+    def replace_partition(self, params, sub):
+        """Inverse of `partition_spec` on the params pytree: return
+        `params` with the optimizer-target subtree replaced by `sub`.
+        ZeRO-3 uses this pair to split params into a sharded chunk
+        (the partition) plus an unsharded rest, and to graft a gathered
+        partition back in per use. Default (partition == whole tree):
+        the rest is empty, so the grafted tree IS `sub`."""
+        return sub
+
     # -- lag-ring helpers ----------------------------------------------
     def _ring_init(self, behavior_params):
         return jax.tree_util.tree_map(

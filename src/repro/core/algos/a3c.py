@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.advantages import nstep_return
 from repro.core.agent import PolicyGradientAgent, register
-from repro.core.networks import MLPPolicy
+from repro.core.networks import make_policy
 from repro.optim import adamw, clip_by_global_norm
 
 
@@ -72,8 +72,10 @@ class A3CAgent(PolicyGradientAgent):
     rendering of Hogwild-style lock-free updates."""
 
     def __init__(self, env, ring_size=1, total_iters=None, lr=1e-3,
-                 hidden=(64, 64), max_grad_norm=1.0, **algo_kwargs):
-        self.policy = MLPPolicy.for_spec(env.spec, hidden)
+                 hidden=(64, 64), max_grad_norm=1.0, policy="mlp",
+                 trunk_kwargs=None, **algo_kwargs):
+        self.policy = make_policy(env.spec, policy, hidden,
+                                  **(trunk_kwargs or {}))
         self.algo = A3C(self.policy, **algo_kwargs)
         self.opt = clip_by_global_norm(adamw(lr), max_grad_norm)
         self.ring_size = ring_size

@@ -26,6 +26,9 @@ class DQN:
     prioritized: bool = True
     replay_capacity: int = 10000
     fused_sampling: bool = False  # Gumbel-top-k kernel path (replay.py)
+    net: object = None  # pluggable q-net adapter (init/apply -> (q, _));
+    #                     None = the house MLP below. Lets the trunk
+    #                     policy (networks.TrunkPolicy) serve as q-net.
 
     @property
     def replay(self):
@@ -36,17 +39,21 @@ class DQN:
 
     # -- q network -----------------------------------------------------
     def init(self, key):
-        sizes = (self.obs_dim,) + self.hidden + (self.n_actions,)
-        ks = jax.random.split(key, len(sizes))
-        net = [{"w": dense_init(ks[i], (sizes[i], sizes[i + 1])),
-                "b": jnp.zeros((sizes[i + 1],))}
-               for i in range(len(sizes) - 1)]
+        if self.net is not None:
+            net = self.net.init(key)
+        else:
+            sizes = (self.obs_dim,) + self.hidden + (self.n_actions,)
+            ks = jax.random.split(key, len(sizes))
+            net = [{"w": dense_init(ks[i], (sizes[i], sizes[i + 1])),
+                    "b": jnp.zeros((sizes[i + 1],))}
+                   for i in range(len(sizes) - 1)]
         return {"online": net,
                 "target": jax.tree_util.tree_map(jnp.copy, net),
                 "steps": jnp.zeros((), jnp.int32)}
 
-    @staticmethod
-    def q_values(net, obs):
+    def q_values(self, net, obs):
+        if self.net is not None:
+            return self.net.apply(net, obs)[0]
         h = obs
         for lay in net[:-1]:
             h = jax.nn.relu(h @ lay["w"] + lay["b"])
@@ -121,13 +128,13 @@ class _QPolicy:
         self.dqn = dqn
 
     def apply(self, params, obs):
-        q = DQN.q_values(params["net"], obs)
+        q = self.dqn.q_values(params["net"], obs)
         return q, q.max(axis=-1)
 
     def sample(self, params, obs, key):
         a = self.dqn.act({"online": params["net"]}, obs, key,
                          params["eps"])
-        q = DQN.q_values(params["net"], obs)
+        q = self.dqn.q_values(params["net"], obs)
         logp = jnp.take_along_axis(jax.nn.log_softmax(q),
                                    a[..., None], -1)[..., 0]
         return a, logp
@@ -136,7 +143,7 @@ class _QPolicy:
         """ε-greedy draw + log-prob + value from ONE q evaluation (the
         sample/apply pair evaluated the net three times); same key
         discipline as DQN.act, so actions are bitwise unchanged."""
-        q = DQN.q_values(params["net"], obs)
+        q = self.dqn.q_values(params["net"], obs)
         greedy = jnp.argmax(q, axis=-1)
         rand = jax.random.randint(key, greedy.shape, 0,
                                   self.dqn.n_actions)
@@ -156,12 +163,21 @@ class DQNAgent(Agent):
     def __init__(self, env, ring_size=1, total_iters=None, lr=1e-3,
                  hidden=(64, 64), prioritized=True, replay_capacity=20000,
                  batch_size=64, warmup=8, eps_start=1.0, eps_end=0.05,
-                 eps_decay_steps=None, **algo_kwargs):
+                 eps_decay_steps=None, policy="mlp", trunk_kwargs=None,
+                 **algo_kwargs):
         spec = env.spec
         self.obs_space = spec.observation
+        net = None
+        if policy == "trunk":
+            from repro.core.networks import TrunkPolicy
+            net = TrunkPolicy.for_spec(spec, **(trunk_kwargs or {}))
+        elif policy != "mlp":
+            raise ValueError(f"unknown policy {policy!r}: expected "
+                             f"'mlp' or 'trunk'")
         self.dqn = DQN(spec.obs_dim, spec.n_actions, hidden=tuple(hidden),
                        prioritized=prioritized,
-                       replay_capacity=replay_capacity, **algo_kwargs)
+                       replay_capacity=replay_capacity, net=net,
+                       **algo_kwargs)
         self.policy = _QPolicy(self.dqn)
         self.opt = adamw(lr)
         self.ring_size = ring_size
@@ -192,6 +208,9 @@ class DQNAgent(Agent):
         """Only the online net is optimizer-updated (opt_state mirrors
         it); target net + step counter ride outside the shard."""
         return state.params["online"]
+
+    def replace_partition(self, params, sub):
+        return dict(params, online=sub)
 
     def actor_policy(self, state, delay=0):
         frac = jnp.clip(state.steps.astype(jnp.float32)

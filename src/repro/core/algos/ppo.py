@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.core.advantages import gae
 from repro.core.agent import PolicyGradientAgent, TrainState, register
-from repro.core.networks import MLPPolicy
+from repro.core.networks import make_policy
 from repro.optim import adamw, clip_by_global_norm
 
 __all__ = ["gae", "PPO", "PPOAgent"]  # gae re-exported for back-compat
@@ -89,8 +89,10 @@ class PPOAgent(PolicyGradientAgent):
 
     def __init__(self, env, ring_size=1, total_iters=None, lr=3e-4,
                  hidden=(64, 64), n_epochs=4, n_minibatch=4,
-                 max_grad_norm=0.5, **algo_kwargs):
-        self.policy = MLPPolicy.for_spec(env.spec, hidden)
+                 max_grad_norm=0.5, policy="mlp", trunk_kwargs=None,
+                 **algo_kwargs):
+        self.policy = make_policy(env.spec, policy, hidden,
+                                  **(trunk_kwargs or {}))
         self.algo = PPO(self.policy, **algo_kwargs)
         self.opt = clip_by_global_norm(adamw(lr), max_grad_norm)
         self.n_epochs = n_epochs

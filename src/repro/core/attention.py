@@ -1,0 +1,30 @@
+"""Attention on the learner hot path — public API.
+
+House ref/kernel/ops convention (same seam as core/vtrace.py): the
+model-side grouped-query layout (B, S, KVH, G, D) dispatches to the
+Pallas flash-attention kernel (kernels/flash_attention/ops.py) on TPU
+and to the pure-jnp oracle (kernels/flash_attention/ref.py) elsewhere,
+so the transformer policy trunk (networks.TrunkPolicy) trains through
+one call site on every backend. Both paths share the oracle; parity is
+pinned in tests/test_kernels.py.
+"""
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_mode
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(qg, k, v, *, causal=True, window=0, use_kernel=False):
+    """Grouped-query attention over the model layout.
+
+    qg: (B, S, KVH, G, D) queries grouped per kv head; k, v:
+    (B, S, KVH, D). Returns (B, S, KVH, G, D). `window` > 0 keeps only
+    the trailing `window` keys per query (sliding-window attention)."""
+    if use_kernel and not interpret_mode():
+        from repro.kernels.flash_attention.ops import flash_attention
+        return flash_attention(qg, k, v, causal=causal, window=window)
+    B, S, KVH, G, D = qg.shape
+    q = jnp.moveaxis(qg.reshape(B, S, KVH * G, D), 1, 2)  # (B, H, S, D)
+    o = attention_ref(q, jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+                      causal=causal, window=window)
+    return jnp.moveaxis(o, 1, 2).reshape(B, S, KVH, G, D)

@@ -54,25 +54,27 @@ _SYNC_EXTRA = {"bsp": lambda ax: 0,
                "asp": lambda ax: ax.max_delay,
                "ssp": lambda ax: min(ax.max_delay, ax.staleness_bound)}
 
-ROLES = ("data", "shard")
+ROLES = ("data", "shard", "zero3")
 
 
 @dataclasses.dataclass(frozen=True)
 class AxisSpec:
     """One named mesh axis: its size, how gradients/params are exchanged
     across it (§3), how stale its members may act (§6), and its role —
-    `data` (plain data-parallel workers) or `shard` (ZeRO-2 learner-
+    `data` (plain data-parallel workers), `shard` (ZeRO-2 learner-
     state sharding: gradients are reduce-scattered over the axis, the
     optimizer update runs on the local 1/size slice of the flattened
     params/opt_state, and params are all-gathered before the next
-    rollout)."""
+    rollout), or `zero3` (full ZeRO-3: params are additionally STORED
+    as 1/size chunks in TrainState and all-gathered per use inside
+    learner_step/actor_policy — gather, compute, drop)."""
     name: str
     size: int
     collective: str = "allreduce"   # §3: allreduce | ps | gossip
     sync: str = "bsp"               # §6: bsp | asp | ssp
     max_delay: int = 4              # asp worst-case extra staleness
     staleness_bound: int = 1        # ssp bound on extra staleness
-    role: str = "data"              # data | shard (ZeRO learner states)
+    role: str = "data"              # data | shard | zero3 (ZeRO states)
 
     def __post_init__(self):
         if not self.name:
@@ -88,13 +90,20 @@ class AxisSpec:
         if self.role not in ROLES:
             raise ValueError(f"axis {self.name!r}: role {self.role!r} "
                              f"not in {ROLES}")
-        if self.role == "shard" and self.collective != "allreduce":
+        if self.role in ("shard", "zero3") and self.collective != "allreduce":
             raise ValueError(
-                f"axis {self.name!r}: a shard-role axis must use the "
-                f"'allreduce' collective (got {self.collective!r}) — "
+                f"axis {self.name!r}: a {self.role}-role axis must use "
+                f"the 'allreduce' collective (got {self.collective!r}) — "
                 f"its gradient mean fuses into the data-parallel "
                 f"reduction so that pmean + local slice IS the "
                 f"reduce-scatter (bitwise the replicated plan)")
+        if self.role == "zero3" and self.sync != "bsp":
+            raise ValueError(
+                f"axis {self.name!r}: a zero3-role axis must use 'bsp' "
+                f"sync (got {self.sync!r}) — the gather-per-use params "
+                f"are assembled from one ring slot per shard member, so "
+                f"shard-group members must act in lockstep; spend the "
+                f"staleness budget on the data axes instead")
 
     @property
     def ring_extra(self) -> int:
@@ -130,7 +139,7 @@ class DistPlan:
             dups = sorted({n for n in names if names.count(n) > 1})
             raise ValueError(f"duplicate mesh axis name(s) {dups} "
                              f"in {names}")
-        shards = [a.name for a in self.axes if a.role == "shard"]
+        shards = [a.name for a in self.axes if a.role in ("shard", "zero3")]
         if len(shards) > 1:
             raise ValueError(f"at most one shard-role axis is supported "
                              f"(got {shards}); compose a bigger shard "
@@ -190,6 +199,23 @@ class DistPlan:
                    actors=None if actors is None else tuple(actors))
 
     @classmethod
+    def zero3(cls, n_workers: int, n_shards: int,
+              collective: str = "allreduce", sync: str = "bsp",
+              max_delay: int = 4, staleness_bound: int = 1,
+              actors=None) -> "DistPlan":
+        """Data-parallel workers + a full ZeRO-3 shard axis (innermost):
+        like `zero()` but params are also stored as 1/n chunks and all-
+        gathered per use inside learner_step/actor_policy — gather,
+        compute, drop — so per-device params+opt_state bytes shrink
+        toward 1/n instead of only the opt_state."""
+        return cls(axes=(AxisSpec("workers", n_workers, collective, sync,
+                                  max_delay, staleness_bound),
+                         AxisSpec("shard", n_shards, "allreduce", "bsp",
+                                  max_delay, staleness_bound,
+                                  role="zero3")),
+                   actors=None if actors is None else tuple(actors))
+
+    @classmethod
     def parse(cls, spec: str, max_delay: int = 4,
               staleness_bound: int = 1, actors=None) -> "DistPlan":
         """Parse the CLI grammar: comma-separated axes, outermost first,
@@ -197,10 +223,13 @@ class DistPlan:
 
             hosts=2:allreduce:bsp,workers=2:gossip:asp
             workers=4:allreduce:bsp,shard=2:allreduce:bsp:shard
+            workers=4:allreduce:bsp,shard=2:allreduce:bsp:zero3
 
-        Role ``shard`` marks the ZeRO-2 learner-state sharding axis
-        (default ``data``). Empty specs, empty segments and duplicate
-        axis names raise errors naming the offending input."""
+        Role ``shard`` marks the ZeRO-2 learner-state sharding axis,
+        ``zero3`` the full ZeRO-3 axis (params stored sharded too,
+        gathered per use); default ``data``. Empty specs, empty
+        segments and duplicate axis names raise errors naming the
+        offending input."""
         if not spec or not spec.strip():
             raise ValueError(
                 "empty plan: expected comma-separated axes "
@@ -263,9 +292,10 @@ class DistPlan:
 
     @property
     def shard_axis(self) -> Optional[AxisSpec]:
-        """The (single, validated) ZeRO shard-role axis, or None."""
+        """The (single, validated) ZeRO shard-role axis — role `shard`
+        (ZeRO-2) or `zero3` — or None."""
         for a in self.axes:
-            if a.role == "shard":
+            if a.role in ("shard", "zero3"):
                 return a
         return None
 

@@ -112,38 +112,85 @@ class MLPPolicy:
 
 class TrunkPolicy:
     """Any registry architecture as a policy trunk (survey §2 LLM-actor
-    mapping): integer token observation -> transformer -> policy/value
-    heads. Used by examples/ppo_trunk_gridworld.py."""
+    mapping): observation -> transformer -> policy/value heads, with
+    attention routed through `repro.core.attention` (the flash-attention
+    dispatcher) when `use_kernels` is on.
+
+    Two observation modes, chosen by `for_spec` off the EnvSpec:
+      * token mode (integer obs, `obs_dim=None`): the (..., ctx) int
+        history embeds through the model's token table — the original
+        adapter (examples/ppo_trunk_gridworld.py).
+      * feature mode (float obs, `obs_dim=F`): each scalar feature
+        becomes one sequence position via a learned per-feature affine
+        lift `obs[..., i] * w[i] + b[i]` into d_model, bypassing the
+        token table — so box-observation envs (cartpole, pendulum)
+        train the same transformer trunk.
+    Discrete heads emit logits; continuous heads reuse MLPPolicy's
+    tanh-gaussian squashed into `act_mid ± act_scale`."""
 
     def __init__(self, arch="paper-drl-trunk", n_actions=4, ctx=8,
-                 reduced=True):
+                 reduced=True, obs_dim=None, act_dim=1, act_mid=0.0,
+                 act_scale=1.0, use_kernels=False):
         from repro.models import build_model
         from repro.models.model import ModelOpts
-        self.lm = build_model(arch, ModelOpts(dtype="float32", remat=False),
+        self.lm = build_model(arch, ModelOpts(dtype="float32", remat=False,
+                                              use_kernels=use_kernels),
                               reduced=reduced)
         self.n_actions = n_actions
-        self.ctx = ctx
-        self.discrete = True
-        self.obs_dim = ctx
+        self.discrete = n_actions > 0
+        self.features = obs_dim          # None => token-obs mode
+        self.ctx = ctx if obs_dim is None else obs_dim
+        self.obs_dim = self.ctx
+        self.act_dim = act_dim
+        self.act_mid = act_mid
+        self.act_scale = act_scale
+
+    @classmethod
+    def for_spec(cls, spec, arch="paper-drl-trunk", reduced=True,
+                 use_kernels=True):
+        """Build a trunk policy matching an EnvSpec: integer obs run in
+        token mode, float obs in feature mode; head width and continuous
+        action bounds read off the spec (mirrors MLPPolicy.for_spec)."""
+        a, o = spec.action, spec.observation
+        kw = dict(arch=arch, reduced=reduced, use_kernels=use_kernels)
+        if jnp.issubdtype(jnp.dtype(o.dtype), jnp.integer):
+            kw["ctx"] = spec.obs_dim
+        else:
+            kw["obs_dim"] = spec.obs_dim
+        if a.discrete:
+            return cls(n_actions=a.n, **kw)
+        return cls(n_actions=0, act_dim=a.size, act_mid=a.midpoint,
+                   act_scale=a.half_range, **kw)
 
     def init(self, key):
-        k1, k2, k3 = jax.random.split(key, 3)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
         d = self.lm.cfg.d_model
-        return {"lm": self.lm.init(k1),
-                "pi": {"w": dense_init(k2, (d, self.n_actions),
-                                       scale=0.01),
-                       "b": jnp.zeros((self.n_actions,))},
-                "v": {"w": dense_init(k3, (d, 1)), "b": jnp.zeros((1,))}}
+        out = self.n_actions if self.discrete else self.act_dim
+        p = {"lm": self.lm.init(k1),
+             "pi": {"w": dense_init(k2, (d, out), scale=0.01),
+                    "b": jnp.zeros((out,))},
+             "v": {"w": dense_init(k3, (d, 1)), "b": jnp.zeros((1,))}}
+        if self.features is not None:
+            p["feat"] = {"w": dense_init(k4, (self.features, d)),
+                         "b": jnp.zeros((self.features, d))}
+        if not self.discrete:
+            p["log_std"] = jnp.full((self.act_dim,), -0.5)
+        return p
 
-    def apply(self, params, tokens):
-        """tokens: (..., ctx) int32 history of token observations."""
-        tok = tokens.astype(jnp.int32) % self.lm.cfg.vocab
-        squeeze = tok.ndim == 1
+    def apply(self, params, obs):
+        """obs: (..., ctx) int token history or (..., F) float features
+        -> (pi_out, value); pi_out logits (discrete) or mean."""
+        squeeze = obs.ndim == 1
         if squeeze:
-            tok = tok[None]
+            obs = obs[None]
         from repro.models.layers import (embed_tokens, apply_norm)
-        x = embed_tokens(params["lm"]["embed"], tok, self.lm.cfg,
-                         jnp.float32)
+        if self.features is None:
+            tok = obs.astype(jnp.int32) % self.lm.cfg.vocab
+            x = embed_tokens(params["lm"]["embed"], tok, self.lm.cfg,
+                             jnp.float32)
+        else:
+            x = (obs.astype(jnp.float32)[..., None]
+                 * params["feat"]["w"] + params["feat"]["b"])  # (B, F, d)
         x, _, _ = self.lm._run_seq(params["lm"], x, jnp.int32(0), None, 0)
         h = apply_norm(params["lm"]["final_norm"], x)[:, -1]
         pi = h @ params["pi"]["w"] + params["pi"]["b"]
@@ -156,3 +203,16 @@ class TrunkPolicy:
     sample = MLPPolicy.sample
     sample_value = MLPPolicy.sample_value
     log_prob = MLPPolicy.log_prob
+
+
+def make_policy(spec, policy="mlp", hidden=(64, 64), **trunk_kwargs):
+    """Policy factory shared by the algorithm registry: `policy="mlp"`
+    (the house actor-critic MLP, `hidden` widths) or `policy="trunk"`
+    (the transformer trunk via TrunkPolicy.for_spec; `trunk_kwargs`
+    forwards arch/reduced/use_kernels)."""
+    if policy == "trunk":
+        return TrunkPolicy.for_spec(spec, **trunk_kwargs)
+    if policy != "mlp":
+        raise ValueError(f"unknown policy {policy!r}: expected 'mlp' "
+                         f"or 'trunk'")
+    return MLPPolicy.for_spec(spec, hidden)

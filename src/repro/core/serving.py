@@ -127,7 +127,11 @@ class ParamStore:
         """Publish the live actor-param ring view: whatever
         `agent.actor_policy(state, delay)` serves the rollout engine
         (for DQN that includes the annealed exploration rate, so served
-        actions match the live actors bitwise)."""
+        actions match the live actors bitwise). A ZeRO-3 sharded
+        TrainState (topology.ZeRO3Agent wrapper form) is reassembled to
+        the replicated tree shape first, so the published pytree always
+        matches the plan-independent template."""
+        state = getattr(agent, "host_state", lambda s: s)(state)
         return self.publish(agent.actor_policy(state, delay))
 
     def load_checkpoint(self, path, agent, example_state=None,

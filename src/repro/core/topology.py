@@ -19,7 +19,9 @@ all-gather helpers (`local_shard` / `reduce_scatter_mean` /
 `all_gather_shards`) and `zero_sharded_optimizer`, which partitions any
 optimizer's state 1/n per device over a mesh axis while keeping params
 replicated (survey §5 memory ceiling; SRL / Stooke & Abbeel's
-large-batch learner split).
+large-batch learner split) — plus `ZeRO3Agent`, the full ZeRO-3
+gather-per-use wrapper for `zero3`-role axes (params stored sharded
+too, all-gathered per use inside learner_step/actor_policy).
 """
 from __future__ import annotations
 
@@ -161,6 +163,150 @@ def zero_sharded_optimizer(opt, axis: str, n_shards: int):
     ZeROShardedOptimizer). The Trainer installs this on the agent's
     optimizer whenever its DistPlan carries a `shard`-role axis."""
     return ZeROShardedOptimizer(opt, axis, n_shards)
+
+
+class ZeRO3Agent:
+    """Full ZeRO-3 discipline over mesh axis `axis`, as an Agent wrapper
+    (DistPlan role ``zero3``): the inner agent's optimizer-target params
+    (`partition_spec`) are STORED flattened-and-padded 1/n per device in
+    TrainState and all-gathered *per use* — gather → compute → drop —
+    inside both `learner_step` and `actor_policy`, instead of ZeRO-2's
+    persistent replicated copy. The actor-param lag ring is stored as
+    chunks too, so per-device params+opt_state+ring bytes all shrink
+    toward 1/n.
+
+    Wrapper-form TrainState layout (per device, inside shard_map):
+
+        params    {"zero3": (chunk,) this device's param chunk,
+                   "rest":  inner params with the partition removed
+                            (`replace_partition(params, None)`)}
+        ring      (ring_size, chunk) chunked actor-param history
+        opt_state untouched (the inner opt is already the ZeRO-2
+                  wrapper, so its state is chunk-shaped)
+
+    Every transform is a deterministic concatenation or slice and
+    `all_gather_shards ∘ local_shard` is the identity on the padded
+    vector, so a ZeRO-3 fit is f32-bitwise the replicated fit and a
+    size-1 shard axis is a bitwise no-op (pinned, same discipline as
+    ZeRO-2, in tests/test_trainer.py). `host_state` reassembles a
+    host-layout wrapper state back to the inner agent's replicated tree
+    form — checkpoints and ParamStore templates stay plan-independent.
+
+    `init` returns HOST layout: chunked leaves carry a leading
+    (n_shards,) dim (params["zero3"] (n_shards, chunk); ring
+    (n_shards, ring_size, chunk)) which the Trainer lays out along the
+    shard mesh axis (`Trainer._lay_out_zero3`)."""
+
+    def __init__(self, inner, axis: str, n_shards: int):
+        self.inner = inner
+        self.axis = axis
+        self.n_shards = n_shards
+        self.policy = inner.policy
+        self.ring_size = inner.ring_size
+        self.opt = inner.opt
+
+    # -- layout plumbing ----------------------------------------------
+    def _flatten(self, tree):
+        from repro.core.agent import flatten_and_pad
+        return flatten_and_pad(tree, self.n_shards)
+
+    def _gather(self, chunk):
+        """chunk (chunk,) -> the partition pytree (gather-per-use)."""
+        vec = all_gather_shards(chunk, self.axis)
+        return self._unravel(vec[:self._size])
+
+    def is_wrapper_state(self, state) -> bool:
+        """True for wrapper-form TrainStates (chunked params); False for
+        inner/reassembled form (checkpoint restores, fit() output)."""
+        return isinstance(state.params, dict) and "zero3" in state.params
+
+    # -- Agent protocol ------------------------------------------------
+    def partition_spec(self, state):
+        if self.is_wrapper_state(state):
+            return state.params["zero3"]
+        return self.inner.partition_spec(state)
+
+    def replace_partition(self, params, sub):
+        return self.inner.replace_partition(params, sub)
+
+    def init(self, key):
+        from repro.core.agent import TrainState
+        st = self.inner.init(key)
+        part = self.inner.partition_spec(st)
+        vec, size, unravel = self._flatten(part)
+        self._size, self._padded = int(size), int(vec.size)
+        self._chunk = self._padded // self.n_shards
+        self._unravel = unravel
+        slot0 = jax.tree_util.tree_map(lambda r: r[0], st.ring)
+        if (jax.tree_util.tree_structure(part)
+                != jax.tree_util.tree_structure(slot0)):
+            raise ValueError(
+                "ZeRO-3 requires the actor ring to store the same pytree "
+                "as partition_spec (the behavior params ARE the sharded "
+                "partition); got differing structures")
+        ring = jnp.stack([self._flatten(
+            jax.tree_util.tree_map(lambda r: r[d], st.ring))[0]
+            .reshape(self.n_shards, self._chunk)
+            for d in range(self.ring_size)], axis=1)
+        params = {"zero3": vec.reshape(self.n_shards, self._chunk),
+                  "rest": self.inner.replace_partition(st.params, None)}
+        return TrainState(params, st.opt_state, st.extra, ring, st.steps)
+
+    def learner_step(self, state, traj, boot_obs, key,
+                     grad_tx=None, param_tx=None):
+        from repro.core.agent import TrainState
+        sub = self._gather(state.params["zero3"])
+        params = self.inner.replace_partition(state.params["rest"], sub)
+        # dummy full ring: the inner step's ring push is discarded (the
+        # chunk ring below is authoritative), so XLA DCEs the broadcast
+        ring = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p, (self.ring_size,) + p.shape),
+            sub)
+        new, metrics = self.inner.learner_step(
+            TrainState(params, state.opt_state, state.extra, ring,
+                       state.steps),
+            traj, boot_obs, key, grad_tx=grad_tx, param_tx=param_tx)
+        nvec, _, _ = self._flatten(self.inner.partition_spec(new))
+        chunk = local_shard(nvec, self.axis, self.n_shards)
+        ring_c = jnp.roll(state.ring, 1, axis=0).at[0].set(chunk)
+        params = {"zero3": chunk,
+                  "rest": self.inner.replace_partition(new.params, None)}
+        return (TrainState(params, new.opt_state, new.extra, ring_c,
+                           new.steps), metrics)
+
+    def actor_policy(self, state, delay=0):
+        from repro.core.agent import TrainState
+        if not self.is_wrapper_state(state):
+            # reassembled form (fit() output / checkpoint restore, e.g.
+            # via ParamStore.publish_from_state) — inner handles it
+            return self.inner.actor_policy(state, delay)
+        d = jnp.minimum(jnp.asarray(delay, jnp.int32), self.ring_size - 1)
+        sub = self._gather(jnp.take(state.ring, d, axis=0))
+        ring1 = jax.tree_util.tree_map(lambda p: p[None], sub)
+        # delay resolved above; inner may still read steps (DQN ε-anneal)
+        return self.inner.actor_policy(
+            TrainState(None, None, None, ring1, state.steps), 0)
+
+    def host_state(self, state):
+        """Reassemble a HOST-layout wrapper TrainState (leading
+        (n_shards,) dims on chunked leaves, no mesh dims) into the inner
+        agent's replicated tree form, with a template-shaped opt_state —
+        `checkpoint.load_train_state` and `ParamStore.publish_from_state`
+        route templates through this so they stay plan-independent.
+        Inner-form states pass through unchanged."""
+        from repro.core.agent import TrainState
+        if not self.is_wrapper_state(state):
+            return state
+        sub = self._unravel(
+            state.params["zero3"].reshape(-1)[:self._size])
+        params = self.inner.replace_partition(state.params["rest"], sub)
+        slots = [self._unravel(
+            state.ring[:, d, :].reshape(-1)[:self._size])
+            for d in range(self.ring_size)]
+        ring = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *slots)
+        opt = getattr(self.inner.opt, "inner", self.inner.opt)
+        return TrainState(params, opt.init(sub), state.extra, ring,
+                          state.steps)
 
 
 def strip_worker_dim(tree, n: int = 1):

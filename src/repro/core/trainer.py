@@ -71,8 +71,9 @@ from repro.core.agent import flatten_and_pad
 from repro.core.distribution import DistPlan
 from repro.core.pipeline import queue_init, queue_pop, queue_push
 from repro.core.rollout import rollout
-from repro.core.topology import (replicate_for, restore_worker_dim,
-                                 strip_worker_dim, zero_sharded_optimizer)
+from repro.core.topology import (ZeRO3Agent, replicate_for,
+                                 restore_worker_dim, strip_worker_dim,
+                                 zero_sharded_optimizer)
 
 
 @dataclasses.dataclass
@@ -143,6 +144,16 @@ class Trainer:
         shard = plan.shard_axis
         self._sharded = (shard is not None and shard.size > 1
                          and plan.n_devices > 1)
+        # full ZeRO-3 (zero3-role axis): params stored sharded too and
+        # gathered per use; executed by wrapping the agent below
+        self._zero3 = self._sharded and shard.role == "zero3"
+        if self._zero3 and cfg.pipeline:
+            raise ValueError(
+                f"pipeline=True cannot combine with the zero3-role axis "
+                f"{shard.name!r}: the trajectory queue's item template "
+                f"is shape-traced outside the mesh program, where the "
+                f"gather-per-use actor params have no axis environment "
+                f"— use role 'shard' (ZeRO-2) or fused mode")
         if self._sharded and not hasattr(self.agent, "opt"):
             raise ValueError(
                 f"algorithm {cfg.algo!r} exposes no `.opt` optimizer — "
@@ -158,6 +169,10 @@ class Trainer:
         if self._sharded:
             self.agent.opt = zero_sharded_optimizer(
                 self.agent.opt, shard.name, shard.size)
+        if self._zero3:
+            # wrap AFTER the opt swap: the wrapper's inner.init then
+            # produces the chunk-shaped opt_state ZeRO-3 stores
+            self.agent = ZeRO3Agent(self.agent, shard.name, shard.size)
         self._base_key = jax.random.PRNGKey(cfg.seed)
         self._step_cache = {}
         self.actor_shards = []   # actual env count per superstep dispatch
@@ -556,7 +571,15 @@ class Trainer:
         k_init, k_env, k_delay = jax.random.split(self._base_key, 3)
         state = self.agent.init(k_init)
         shard = self.plan.shard_axis
-        if self._sharded:
+        if self._zero3:
+            # the wrapper's init already ran flatten_and_pad and caches
+            # the partition geometry + unravel on itself
+            self._part_unravel = self.agent._unravel
+            self.partition = {
+                "axis": shard.name, "n_shards": shard.size,
+                "size": self.agent._size, "padded": self.agent._padded,
+                "chunk": self.agent._chunk}
+        elif self._sharded:
             # record the flatten-and-pad partition of the optimizer
             # target (agent.partition_spec) for reporting, benchmarks
             # and the end-of-fit opt_state reassembly; padded size is
@@ -576,11 +599,37 @@ class Trainer:
         delays = (self.plan.make_delay_schedule(cfg.iters, k_delay)
                   + cfg.policy_lag)
         if self.mesh is not None:
-            state = replicate_for(self.mesh, self.plan.axis_names, state)
+            state = (self._lay_out_zero3(state) if self._zero3
+                     else replicate_for(self.mesh, self.plan.axis_names,
+                                        state))
             sim = self._shard_sim(sim)
         else:
             delays = delays.reshape(cfg.iters)
         return state, sim, delays
+
+    def _lay_out_zero3(self, state):
+        """Mesh layout for a HOST-layout ZeRO-3 TrainState: chunked
+        leaves (params["zero3"] (n_shards, chunk); ring (n_shards,
+        ring_size, chunk)) distribute their leading dim along the shard
+        mesh axis — device at shard index i owns chunk i — while every
+        other leaf replicates like `replicate_for`."""
+        names = self.plan.axis_names
+        shape = self.plan.mesh_shape
+        k = names.index(self.partition["axis"])
+
+        def spread(a):
+            lead = [1] * len(names)
+            lead[k] = a.shape[0]
+            a = a.reshape(tuple(lead) + a.shape[1:])
+            return jnp.broadcast_to(a, shape + a.shape[len(names):])
+
+        repl = lambda t: jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p, shape + p.shape), t)
+        return agent_api.TrainState(
+            {"zero3": spread(state.params["zero3"]),
+             "rest": repl(state.params["rest"])},
+            repl(state.opt_state), repl(state.extra),
+            spread(state.ring), repl(state.steps))
 
     # ---- elastic actor shards (plan.actors) ---------------------------
     def _reshard_envs(self, sim, n_total, key):
@@ -699,7 +748,9 @@ class Trainer:
             first = (0,) * len(self.plan.axes)
             take0 = lambda t: jax.tree_util.tree_map(
                 lambda a: a[first], t)
-            if self.partition is not None:
+            if self._zero3:
+                state = self._unshard_zero3(state, take0)
+            elif self.partition is not None:
                 # checkpoint-shaped result: reassemble the ZeRO shards
                 # into the replicated-form opt_state before dropping
                 # the mesh dims (device 0 for everything else)
@@ -711,6 +762,29 @@ class Trainer:
             else:
                 state = take0(state)
         return state, history
+
+    def _unshard_zero3(self, state, take0):
+        """Reassemble a mesh-layout ZeRO-3 TrainState into the inner
+        agent's replicated tree form (checkpoint shape): param and ring
+        chunks are gathered along the shard axis (row 0 of every data
+        axis), trimmed of padding and unraveled; opt_state goes through
+        the ZeRO-2 reassembly; rest/extra/steps come from device 0."""
+        p = self.partition
+        nd = len(self.plan.axes)
+        k = self.plan.axis_names.index(p["axis"])
+        idx = tuple(slice(None) if i == k else 0 for i in range(nd))
+        sub = self._part_unravel(
+            state.params["zero3"][idx].reshape(-1)[:p["size"]])
+        params = self.agent.replace_partition(
+            take0(state.params["rest"]), sub)
+        ringmat = state.ring[idx]        # (n_shards, ring_size, chunk)
+        slots = [self._part_unravel(
+            ringmat[:, d, :].reshape(-1)[:p["size"]])
+            for d in range(self.agent.ring_size)]
+        ring = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *slots)
+        return agent_api.TrainState(
+            params, self._unshard_opt_state(state.opt_state),
+            take0(state.extra), ring, take0(state.steps))
 
     def _unshard_opt_state(self, opt_state):
         """Reassemble a ZeRO-sharded opt_state (leaves carrying one

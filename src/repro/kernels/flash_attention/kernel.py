@@ -20,7 +20,7 @@ NEG_INF = -1e30
 
 
 def _kernel(qref, kref, vref, oref, mref, lref, accref, *,
-            bq, bk, nk, causal, window, scale):
+            bq, bk, nk, causal, window, scale, valid_len):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -38,6 +38,8 @@ def _kernel(qref, kref, vref, oref, mref, lref, accref, *,
     if window:
         run = jnp.logical_and(run, (ik + 1) * bk - 1
                               > iq * bq - window)
+    if valid_len is not None:  # skip blocks entirely past the real tail
+        run = jnp.logical_and(run, (ik * bk) < valid_len)
 
     @pl.when(run)
     def _compute():
@@ -51,6 +53,8 @@ def _kernel(qref, kref, vref, oref, mref, lref, accref, *,
             mask = mask & (kpos <= qpos)
         if window:
             mask = mask & (kpos > qpos - window)
+        if valid_len is not None:  # zero-padded keys must not be attended
+            mask = mask & (kpos < valid_len)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = mref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
@@ -68,16 +72,22 @@ def _kernel(qref, kref, vref, oref, mref, lref, accref, *,
         oref[0, 0] = (accref[...] / l[:, None]).astype(oref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
-def flash_attention_hsd(q, k, v, *, causal=True, window=0, bq=128, bk=128):
-    """q: (B,H,S,D); k,v: (B,KVH,S,D), S % bq == 0 (wrapper pads)."""
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "valid_len"))
+def flash_attention_hsd(q, k, v, *, causal=True, window=0, bq=128, bk=128,
+                        valid_len=None):
+    """q: (B,H,S,D); k,v: (B,KVH,S,D), S % bq == 0 (wrapper pads).
+    `valid_len` (static) masks key positions >= valid_len so a
+    zero-padded tail is never attended — required for correctness when
+    the wrapper pads a non-causal (or any) input."""
     B, H, S, D = q.shape
     KVH = k.shape[1]
     G = H // KVH
     nq, nk = S // bq, S // bk
     scale = D ** -0.5
     kernel = functools.partial(_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
-                               window=window, scale=scale)
+                               window=window, scale=scale,
+                               valid_len=valid_len)
     scratch = None
     if pltpu is not None:
         scratch = [pltpu.VMEM((bq,), jnp.float32),

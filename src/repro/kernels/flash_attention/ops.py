@@ -17,6 +17,7 @@ def flash_attention(qg, k, v, *, causal=True, window=0, bq=128, bk=128):
         kk = jnp.pad(kk, ((0, 0), (0, 0), (0, pad), (0, 0)))
         vv = jnp.pad(vv, ((0, 0), (0, 0), (0, pad), (0, 0)))
     o = flash_attention_hsd(q, kk, vv, causal=causal, window=window,
-                            bq=bq, bk=bk)
+                            bq=bq, bk=bk,
+                            valid_len=S if pad else None)
     o = o[:, :, :S]
     return o.reshape(B, KVH, G, S, D).transpose(0, 3, 1, 2, 4)

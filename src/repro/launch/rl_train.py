@@ -15,12 +15,19 @@ the unified Agent/Trainer API (repro.core.agent / repro.core.trainer):
               outermost first, each
               ``name=size[:collective[:sync[:role]]]`` with collective
               in {ps, allreduce, gossip} (§3), sync in {bsp, asp, ssp}
-              (§6) and role in {data, shard} — ``shard`` marks the
-              ZeRO-2 learner-state sharding axis (optimizer state
+              (§6) and role in {data, shard, zero3} — ``shard`` marks
+              the ZeRO-2 learner-state sharding axis (optimizer state
               partitioned 1/size per device, gradients reduce-
-              scattered, params all-gathered; allreduce only), e.g.
+              scattered, params all-gathered; allreduce only), ``zero3``
+              full ZeRO-3 (params stored sharded too, all-gathered per
+              use; allreduce + bsp only), e.g.
               ``hosts=2:allreduce:bsp,workers=4:gossip:asp`` or
-              ``workers=4:allreduce:bsp,shard=2:allreduce:bsp:shard``
+              ``workers=4:allreduce:bsp,shard=2:allreduce:bsp:zero3``
+  --policy    mlp | trunk — the policy network every algorithm trains:
+              the house actor-critic MLP or the transformer trunk
+              (networks.TrunkPolicy over configs/paper_drl.py's
+              paper-drl-trunk, attention via core/attention.py's
+              flash-attention dispatcher)
   --actors    elastic env-shard schedule, e.g. ``32,64,32`` — the total
               env count cycles through these values per superstep
               (ElegantRL-Podracer-style elastic actor shards)
@@ -114,14 +121,20 @@ def build_parser():
                          "[:sync[:role]]] — role `shard` marks the "
                          "ZeRO-2 learner-state sharding axis (optimizer "
                          "state lives 1/size per device; must use "
-                         "allreduce), e.g. 'workers=4:allreduce:bsp,"
-                         "shard=2:allreduce:bsp:shard'; overrides "
+                         "allreduce), `zero3` full ZeRO-3 (params "
+                         "stored sharded too, all-gathered per use; "
+                         "allreduce + bsp), e.g. 'workers=4:allreduce:"
+                         "bsp,shard=2:allreduce:bsp:zero3'; overrides "
                          "--n-workers/--topology/--sync (which lower "
                          "onto a 1-D plan)")
     ap.add_argument("--actors", default=None, metavar="N,N,...",
                     help="elastic env-shard schedule: total env counts "
                          "cycled per superstep (each must divide across "
                          "the plan's devices)")
+    ap.add_argument("--policy", default="mlp", choices=("mlp", "trunk"),
+                    help="policy network: the house actor-critic MLP or "
+                         "the transformer trunk (paper-drl-trunk config, "
+                         "flash-attention dispatcher)")
     ap.add_argument("--n-workers", type=int, default=1)
     ap.add_argument("--topology", default="allreduce",
                     choices=TOPOLOGY_CHOICES)
@@ -197,7 +210,7 @@ def main(argv=None):
     except ValueError as e:
         ap.error(str(e))
 
-    algo_kwargs = {}
+    algo_kwargs = {"policy": args.policy}
     if args.algo == "impala":
         algo_kwargs["use_vtrace"] = not args.no_vtrace
     cfg = TrainerConfig(
@@ -211,7 +224,8 @@ def main(argv=None):
     trainer = Trainer(env, cfg)
     _, history = trainer.fit(fused=not args.unfused)
     print(json.dumps({
-        "algo": args.algo, "env": args.env, "plan": plan.describe(),
+        "algo": args.algo, "env": args.env, "policy": args.policy,
+        "plan": plan.describe(),
         "n_devices": plan.n_devices, "fused": not args.unfused,
         # actor-learner pipeline: queue depth the plan's sync admits
         # (0 = lockstep) and the ring capacity actually allocated

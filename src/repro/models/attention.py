@@ -257,8 +257,11 @@ def gqa_seq(cfg, p, x, pos0, kind, opts: AttnOpts, cache_capacity=0,
     elif kind == ATTN_LOCAL:
         o = local_attention(qg, k, v, pos0, window=cfg.window)
     elif opts.use_kernels:
-        from repro.kernels.flash_attention import ops as fa_ops
-        o = fa_ops.flash_attention(qg, k, v, causal=True)
+        # core dispatcher: Pallas flash attention on TPU, the shared
+        # ref oracle elsewhere (interpret-mode Pallas is orders of
+        # magnitude slower than the oracle on CPU)
+        from repro.core.attention import attention as core_attention
+        o = core_attention(qg, k, v, causal=True, use_kernel=True)
     else:
         o = causal_attention(qg, k, v, pos0, n_q_chunks=opts.n_q_chunks,
                              block_k=opts.block_k)

@@ -2,9 +2,11 @@
 the repro-bench/v1 shape (benchmarks/common.validate_bench_json), so
 the machine-readable perf trajectory can't silently rot; plus the
 pinned headlines: BENCH_zero.json (per-device opt_state bytes shrink
-~1/shard_size under the ZeRO shard axis), BENCH_pipeline.json (every
-pipelined depth beats decoupled-serial), and BENCH_serve.json (sane
-p50/p99 grid, zero recompiles after warmup across hot-swaps)."""
+~1/shard_size under the ZeRO-2 shard axis; params+opt <= 0.67x under
+the ZeRO-3 axis on the transformer trunk), BENCH_hotpath.json
+(attention seam rows), BENCH_pipeline.json (every pipelined depth
+beats decoupled-serial), and BENCH_serve.json (sane p50/p99 grid, zero
+recompiles after warmup across hot-swaps)."""
 import glob
 import json
 import os
@@ -74,6 +76,50 @@ def test_zero_bench_pins_opt_state_shrink():
     assert kv["ideal"] == f"1/{n_shards}"
     # and XLA's compiled live-bytes agree the sharded plan is smaller
     assert int(kv["xla_live_saved_bytes"]) > 0, derived
+
+
+def test_zero_bench_pins_zero3_param_state_shrink():
+    """Acceptance (PR 8): BENCH_zero.json records per-device
+    params+opt_state bytes under the zero3-role axis at <= 0.67x the
+    replicated plan on the transformer trunk (each component ~1/n_shards
+    within padding), with XLA argument bytes — the persistent state the
+    compiled superstep carries — corroborating. Live bytes are recorded
+    too; gather-per-use converts the persistent saving into transient
+    temp traffic, so that delta may go either way at 2 shards."""
+    with open(os.path.join(REPO_ROOT, "BENCH_zero.json")) as f:
+        doc = validate_bench_json(json.load(f))
+    rows = {r["name"]: r for r in doc["rows"]}
+    kv = dict(item.split("=", 1) for item in
+              rows["zero3/param_state_shrink"]["derived"].split(";"))
+    n = int(kv["n_shards"])
+    assert n == doc["meta"]["partition_zero3"]["n_shards"]
+    assert float(kv["threshold"]) == 0.67
+    assert float(kv["ratio"]) <= 0.67, kv
+    assert abs(float(kv["params_ratio"]) - 1.0 / n) < 0.01, kv
+    assert abs(float(kv["opt_ratio"]) - 1.0 / n) < 0.01, kv
+    assert int(kv["xla_arg_saved_bytes"]) > 0, kv
+    int(kv["xla_live_saved_bytes"])  # present and integral
+    for name in ("zero_shard/replicated_trunk", "zero_shard/zero3_trunk"):
+        assert rows[name]["us_per_call"] > 0, name
+        assert "xla_arg_bytes=" in rows[name]["derived"], name
+
+
+def test_hotpath_bench_pins_attention_rows():
+    """Acceptance (PR 8): BENCH_hotpath.json times the trunk's
+    attention seam three ways — naive jnp full softmax, the
+    core/attention.py dispatcher ref, and the Pallas flash kernel — in
+    the (B, S, KVH, G, D) grouped-query layout. Holds for the committed
+    full run and the --quick regeneration CI does before this test."""
+    with open(os.path.join(REPO_ROOT, "BENCH_hotpath.json")) as f:
+        doc = validate_bench_json(json.load(f))
+    rows = {r["name"]: r for r in doc["rows"]}
+    for name in ("attention/naive_jnp", "attention/flash_ref",
+                 "attention/flash_kernel"):
+        assert name in rows, sorted(rows)
+        assert rows[name]["us_per_call"] > 0, name
+        assert "S=" in rows[name]["derived"], name
+    assert "full_softmax" in rows["attention/naive_jnp"]["derived"]
+    assert "interpret=" in rows["attention/flash_kernel"]["derived"]
 
 
 def test_pipeline_bench_pins_overlap_claim():

@@ -142,6 +142,49 @@ def test_plan_shard_role_validation():
                        AxisSpec("s2", 2, role="shard")))
 
 
+def test_plan_parse_zero3_role_round_trip():
+    s = "workers=2:allreduce:bsp,shard=2:allreduce:bsp:zero3"
+    plan = DistPlan.parse(s)
+    assert plan.axes[1].role == "zero3"
+    assert plan.shard_axis is plan.axes[1]  # zero3 IS the shard-role axis
+    assert plan.shard_size == 2
+    assert plan.data_axes == (plan.axes[0],)
+    assert plan.describe() == s
+    assert DistPlan.parse(plan.describe()) == plan
+
+
+def test_plan_zero3_constructor_matches_parse():
+    assert DistPlan.zero3(2, 2) == DistPlan.parse(
+        "workers=2:allreduce:bsp,shard=2:allreduce:bsp:zero3")
+
+
+def test_plan_zero3_role_validation():
+    # the zero3 params all-gather rides the fused allreduce too
+    with pytest.raises(ValueError, match="allreduce") as e:
+        AxisSpec("shard", 2, collective="ps", role="zero3")
+    assert "'shard'" in str(e.value)
+    # gather-per-use reads the lag ring in lockstep: zero3 requires bsp
+    with pytest.raises(ValueError, match="bsp") as e:
+        AxisSpec("shard", 2, collective="allreduce", sync="asp",
+                 role="zero3")
+    assert "'shard'" in str(e.value)
+    # shard and zero3 both claim the single shard-role slot
+    with pytest.raises(ValueError, match="at most one shard"):
+        DistPlan(axes=(AxisSpec("s1", 2, role="shard"),
+                       AxisSpec("s2", 2, role="zero3")))
+
+
+def test_plan_parse_zero3_rejections_name_offending_segment():
+    for spec, frag in [
+            ("w=2:allreduce:bsp,s=2:gossip:bsp:zero3", "'s'"),
+            ("w=2:allreduce:bsp,s=2:allreduce:ssp:zero3", "'s'"),
+            ("s1=2:allreduce:bsp:zero3,s2=2:allreduce:bsp:zero3",
+             "at most one shard")]:
+        with pytest.raises(ValueError) as e:
+            DistPlan.parse(spec)
+        assert frag in str(e.value), (spec, str(e.value))
+
+
 def test_plan_parse_rejects_bad_segments_naming_them():
     for spec, frag in [
             ("", "empty plan"),
@@ -181,14 +224,17 @@ def test_plan_parse_describe_round_trip_property(data):
     axes = []
     for i in range(n_axes):
         if i == shard_at:
-            coll, role = "allreduce", "shard"
+            coll = "allreduce"
+            role = data.draw(st.sampled_from(("shard", "zero3")),
+                             label="shard_role")
         else:
             coll = data.draw(
                 st.sampled_from(("allreduce", "ps", "gossip")))
             role = "data"
+        sync = ("bsp" if role == "zero3"  # zero3 axes are bsp-only
+                else data.draw(st.sampled_from(("bsp", "asp", "ssp"))))
         axes.append(AxisSpec(
-            names[i], data.draw(st.integers(1, 8)), coll,
-            data.draw(st.sampled_from(("bsp", "asp", "ssp"))),
+            names[i], data.draw(st.integers(1, 8)), coll, sync,
             max_delay, staleness, role))
     plan = DistPlan(axes=tuple(axes))
     s = plan.describe()

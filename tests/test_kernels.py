@@ -67,6 +67,42 @@ def test_flash_wrapper_layout(rng):
     np.testing.assert_allclose(o1, o2, atol=2e-5)
 
 
+@pytest.mark.parametrize("B,S,KVH,G,D,causal,window", [
+    (2, 128, 2, 2, 32, True, 0),
+    (1, 256, 1, 4, 64, True, 64),      # sliding window, MQA kv=1
+    (2, 96, 2, 1, 32, False, 0),       # non-causal, non-multiple S
+])
+def test_attention_dispatcher_parity(B, S, KVH, G, D, causal, window,
+                                     rng):
+    """core/attention.py dispatcher: ref path == Pallas kernel path in
+    the trunk's (B, S, KVH, G, D) grouped-query layout."""
+    from repro.core.attention import attention
+    ks = jax.random.split(rng, 3)
+    qg = jax.random.normal(ks[0], (B, S, KVH, G, D))
+    k = jax.random.normal(ks[1], (B, S, KVH, D))
+    v = jax.random.normal(ks[2], (B, S, KVH, D))
+    o_ref = attention(qg, k, v, causal=causal, window=window,
+                      use_kernel=False)
+    o_ops = flash_attention(qg, k, v, causal=causal, window=window)
+    assert o_ref.shape == (B, S, KVH, G, D)
+    np.testing.assert_allclose(o_ref, o_ops, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_dispatcher_kernel_flag_off_tpu(rng):
+    """use_kernel=True falls back to the ref path bitwise off-TPU
+    (interpret-mode guard) — same convention as core/vtrace.py."""
+    from repro.core.attention import attention
+    from repro.kernels.common import interpret_mode
+    assert interpret_mode()  # this suite never runs on TPU
+    ks = jax.random.split(rng, 3)
+    qg = jax.random.normal(ks[0], (1, 64, 2, 2, 16))
+    k = jax.random.normal(ks[1], (1, 64, 2, 16))
+    v = jax.random.normal(ks[2], (1, 64, 2, 16))
+    a = attention(qg, k, v, causal=True, use_kernel=True)
+    b = attention(qg, k, v, causal=True, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # ---------------------------------------------------------------- wkv6
 @pytest.mark.parametrize("B,T,H,N,chunk", [
     (2, 100, 3, 16, 32),

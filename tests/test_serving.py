@@ -246,6 +246,83 @@ def test_checkpoint_roundtrip_bitwise(algo, tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+# ------------------------------- ZeRO-3 checkpoint/serve round trip
+_ZERO3_SERVE_SCRIPT = """
+import json, os
+import jax, numpy as np
+import repro.envs as envs
+from repro.checkpoint import save_checkpoint
+from repro.checkpoint.ckpt import load_train_state
+from repro.core import agent as agent_api
+from repro.core.distribution import DistPlan
+from repro.core.serving import ParamStore, ServeEngine
+from repro.core.topology import ZeRO3Agent
+from repro.core.trainer import Trainer, TrainerConfig
+
+env = envs.make("cartpole")
+kw = {"hidden": (16,)}
+cfg = TrainerConfig(algo="impala", iters=4, superstep=2, n_envs=8,
+                    unroll=8, plan=DistPlan.zero3(2, 2), seed=0,
+                    log_every=2, algo_kwargs=kw)
+trainer = Trainer(env, cfg)
+state, _ = trainer.fit()
+path = save_checkpoint(os.environ["CKPT_PATH"], state)
+
+# live: the trainer's agent is still the ZeRO3Agent wrapper — the
+# reassembled fit state must publish through host_state unchanged
+live = ParamStore()
+live.publish_from_state(trainer.agent, state)
+
+# restored (plain): a fresh unwrapped serving agent reads the
+# plan-independent archive directly
+plain = agent_api.make("impala", env, **kw)
+restored = ParamStore()
+restored.load_checkpoint(path, plain)
+
+# restored (wrapped): load_train_state reassembles the wrapper-form
+# init template via host_state before matching the archive
+wrapped = ZeRO3Agent(agent_api.make("impala", env, **kw), "shard", 2)
+st_w, step_w = load_train_state(path, wrapped)
+via_wrapper = ParamStore()
+via_wrapper.publish(wrapped.inner.actor_policy(st_w, 0))
+
+obs = jax.vmap(env.spec.observation.sample)(
+    jax.random.split(jax.random.PRNGKey(7), 5))
+outs = []
+for store in (live, restored, via_wrapper):
+    engine = ServeEngine(trainer.agent.policy, env.spec.observation,
+                         buckets=(8,), store=store, seed=11)
+    outs.append([np.asarray(x).tolist()
+                 for x in engine.eval_bucket(list(obs),
+                                             list(range(5)), 8)])
+print("RESULT " + json.dumps({
+    "plain_bitwise": outs[0] == outs[1],
+    "wrapped_bitwise": outs[0] == outs[2],
+    "step": step_w}))
+"""
+
+
+def test_zero3_checkpoint_serve_round_trip_bitwise(tmp_path):
+    """Satellite 4 acceptance: fit under a zero3-role plan -> save ->
+    restore into (a) a plain serving agent and (b) a ZeRO3Agent-wrapped
+    one -> serve at a fixed bucket bitwise-matches publishing the live
+    fit state. Checkpoints stay plan-independent; the wrapper's
+    host_state makes both templates line up."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=SRC,
+               CKPT_PATH=str(tmp_path / "zero3_impala.npz"))
+    r = subprocess.run([sys.executable, "-c", _ZERO3_SERVE_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["plain_bitwise"], out
+    assert out["wrapped_bitwise"], out
+
+
 # --------------------------------------------------------- CLI contract
 def test_cli_load_buckets_contract(tmp_path):
     """serve_policy honors --load/--buckets, reports the zero-recompile

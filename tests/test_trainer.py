@@ -457,6 +457,108 @@ def test_shard_axis_size2_matches_replicated_after_allgather(
         assert res[key], (algo, key, res)
 
 
+# ------------- ZeRO-3 (zero3-role axis) bitwise parity (all four
+# algorithms, 8 fake devices): params are STORED sharded and gathered
+# per use, so the fit must still match the flat replicated plan
+# f32-bitwise on the MLP policy — gather(local_shard(vec)) is the
+# identity on the padded flat params, and adamw keeps the zero padding
+# zero. Size-2 pins params/ring/history (reassembled opt moments carry
+# the same chunk-vs-tree codegen-ulp caveat as ZeRO-2); the size-1
+# zero3 axis short-circuits to the unwrapped agent and additionally
+# pins opt_state.
+_ZERO3_PARITY_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, numpy as np
+    import repro.envs as envs
+    from repro.core.distribution import DistPlan
+    from repro.core.trainer import Trainer, TrainerConfig
+
+    env = envs.make("cartpole")
+    KW = {"a3c": {"hidden": (8,)}, "impala": {"hidden": (8,)},
+          "ppo": {"hidden": (8,)},
+          "dqn": {"hidden": (8,), "replay_capacity": 512, "warmup": 1}}
+
+    def fit(algo, plan):
+        cfg = TrainerConfig(algo=algo, iters=4, superstep=2, n_envs=8,
+                            unroll=6, plan=plan, log_every=1, seed=0,
+                            algo_kwargs=KW[algo])
+        return Trainer(env, cfg).fit()
+
+    def eq(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.shape != b.shape or a.dtype != b.dtype:
+            return False
+        return bool(np.array_equal(a, b, equal_nan=a.dtype.kind == "f"))
+
+    def bitwise(t1, t2):
+        l1 = jax.tree_util.tree_leaves(t1)
+        l2 = jax.tree_util.tree_leaves(t2)
+        return len(l1) == len(l2) and all(eq(a, b)
+                                          for a, b in zip(l1, l2))
+
+    def hist_eq(h1, h2):
+        return len(h1) == len(h2) and all(
+            r1.keys() == r2.keys() and all(
+                np.array_equal(np.float64(r1[k]), np.float64(r2[k]),
+                               equal_nan=True) for k in r1)
+            for r1, r2 in zip(h1, h2))
+
+    out = {}
+    for algo in ("a3c", "dqn", "impala", "ppo"):
+        s4, h4 = fit(algo, DistPlan.flat(4))
+        s41, h41 = fit(algo, DistPlan.parse(
+            "workers=4:allreduce:bsp,shard=1:allreduce:bsp:zero3"))
+        s8, h8 = fit(algo, DistPlan.flat(8))
+        s42, h42 = fit(algo, DistPlan.zero3(4, 2))
+        out[algo] = {
+            "size1_params": bitwise(s4.params, s41.params),
+            "size1_opt": bitwise(s4.opt_state, s41.opt_state),
+            "size1_ring": bitwise(s4.ring, s41.ring),
+            "size1_hist": hist_eq(h4, h41),
+            "size2_params": bitwise(s8.params, s42.params),
+            "size2_ring": bitwise(s8.ring, s42.ring),
+            "size2_hist": hist_eq(h8, h42)}
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def zero3_parity_results():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", _ZERO3_PARITY_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_zero3_axis_size1_is_bitwise_noop(zero3_parity_results, algo):
+    """Acceptance: a size-1 zero3 axis appended to the flat 4-worker
+    plan is a bitwise no-op — params, opt_state, actor ring and metric
+    history all match today's trainer exactly."""
+    res = zero3_parity_results[algo]
+    for key in ("size1_params", "size1_opt", "size1_ring", "size1_hist"):
+        assert res[key], (algo, key, res)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_zero3_size2_matches_replicated_bitwise(zero3_parity_results,
+                                                algo):
+    """Acceptance: a (workers=4, shard=2:zero3) plan — params stored as
+    1/2 chunks, all-gathered per use inside learner_step and
+    actor_policy — produces f32-bitwise the params, actor ring and
+    history of the flat replicated 8-worker plan on the same devices,
+    for all four algorithms."""
+    res = zero3_parity_results[algo]
+    for key in ("size2_params", "size2_ring", "size2_hist"):
+        assert res[key], (algo, key, res)
+
+
 # -------------------------------------------------------- CLI contract
 def test_cli_a3c_with_topology_and_sync_flags():
     """Legacy flags survive and lower onto a 1-D plan; A3C is reachable
@@ -511,6 +613,39 @@ def test_cli_rejects_malformed_plan():
         env=dict(os.environ, PYTHONPATH=SRC), timeout=120)
     assert r.returncode != 0
     assert "plan" in r.stderr.lower()
+
+
+def test_cli_plan_zero3_role_round_trips_and_reports_partition():
+    """--plan accepts a zero3-role axis, trains through the wrapped
+    agent, and the output JSON echoes the plan verbatim plus the
+    resolved ZeRO partition (axis, shard count, chunk sizes)."""
+    spec = "workers=2:allreduce:bsp,shard=2:allreduce:bsp:zero3"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.rl_train",
+         "--plan", spec, "--iters", "4", "--superstep", "2",
+         "--n-envs", "8", "--unroll", "4", "--log-every", "2"],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=SRC), timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["plan"] == spec
+    assert out["n_devices"] == 4
+    assert out["partition"]["n_shards"] == 2
+    assert out["partition"]["axis"] == "shard"
+    assert out["partition"]["chunk"] * 2 == out["partition"]["padded"]
+    assert out["history"]
+
+
+def test_cli_rejects_zero3_on_wrong_collective_naming_segment():
+    """A zero3 axis on a non-allreduce collective dies in DistPlan
+    validation with an error naming the offending axis."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.rl_train",
+         "--plan", "workers=2:allreduce:bsp,s=2:gossip:bsp:zero3"],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=SRC), timeout=120)
+    assert r.returncode != 0
+    assert "'s'" in r.stderr and "allreduce" in r.stderr
 
 
 # ------------------------------------------- learning sanity (migrated)

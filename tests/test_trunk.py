@@ -1,0 +1,181 @@
+"""Transformer trunk policy (PR 8): TrunkPolicy.for_spec / make_policy
+units, all four algorithms training the trunk through the unchanged
+Trainer, and trunk x ZeRO-3 parity. The trunk's attention runs through
+core/attention.py (flash-attention dispatcher); off-TPU the kernel path
+falls back to the ref bitwise, so everything here is backend-portable.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.envs as envs
+from repro.configs.base import ATTN, ModelConfig
+from repro.core.networks import MLPPolicy, TrunkPolicy, make_policy
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+TINY = ModelConfig(name="tiny-trunk", family="dense", n_layers=2,
+                   d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                   vocab=64, layer_pattern=(ATTN,))
+
+
+# ----------------------------------------------------------- unit level
+def test_trunk_for_spec_feature_mode_discrete():
+    """Float observations lift per-feature into d_model (no token
+    embedding); discrete head samples valid actions."""
+    env = envs.make("cartpole")
+    pol = TrunkPolicy.for_spec(env.spec, arch=TINY, reduced=False)
+    assert pol.features == 4 and pol.n_actions == 2
+    params = pol.init(jax.random.PRNGKey(0))
+    assert "feat" in params and params["feat"]["w"].shape == (4, 32)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (6, 4))
+    logits, v = pol.apply(params, obs)
+    assert logits.shape == (6, 2) and v.shape == (6,)
+    a, logp = pol.sample(params, obs, jax.random.PRNGKey(2))
+    assert a.shape == (6,) and a.dtype == jnp.int32
+    assert bool(jnp.all((a >= 0) & (a < 2)))
+    assert bool(jnp.all(jnp.isfinite(logp)))
+
+
+def test_trunk_for_spec_continuous_head():
+    """Continuous action spaces get a tanh-squashed Gaussian head with a
+    learned log_std, same contract as MLPPolicy."""
+    env = envs.make("pendulum")
+    pol = TrunkPolicy.for_spec(env.spec, arch=TINY, reduced=False)
+    params = pol.init(jax.random.PRNGKey(0))
+    assert "log_std" in params and params["log_std"].shape == (1,)
+    obs = jax.random.normal(jax.random.PRNGKey(1), (5, 3))
+    a, logp = pol.sample(params, obs, jax.random.PRNGKey(2))
+    assert a.shape == (5, 1)
+    assert bool(jnp.all(jnp.abs(a) <= 2.0 + 1e-6))
+    assert bool(jnp.all(jnp.isfinite(logp)))
+
+
+def test_trunk_token_mode_keeps_embedding_path():
+    """Integer observations (token histories) embed through the LM's
+    vocab table — the PR 4 contract test_system pins stays intact."""
+    pol = TrunkPolicy(TINY, n_actions=4, ctx=4)
+    assert pol.features is None
+    params = pol.init(jax.random.PRNGKey(0))
+    assert "feat" not in params
+    obs = jax.random.randint(jax.random.PRNGKey(1), (3, 4), 0, 64)
+    logits, v = pol.apply(params, obs)
+    assert logits.shape == (3, 4) and v.shape == (3,)
+
+
+def test_trunk_make_policy_factory():
+    env = envs.make("cartpole")
+    assert isinstance(make_policy(env.spec, "mlp"), MLPPolicy)
+    pol = make_policy(env.spec, "trunk", arch=TINY, reduced=False)
+    assert isinstance(pol, TrunkPolicy)
+    with pytest.raises(ValueError, match="policy"):
+        make_policy(env.spec, "resnet")
+
+
+def test_trunk_kernel_dispatch_matches_jnp_attention():
+    """use_kernels=True routes attention through the core dispatcher
+    (off-TPU: the flash ref); use_kernels=False keeps the model's
+    chunked jnp path. Same math, different summation order — the two
+    applies must agree to float32 tolerance."""
+    env = envs.make("cartpole")
+    p_ref = TrunkPolicy.for_spec(env.spec, arch=TINY, reduced=False,
+                                 use_kernels=False)
+    p_ker = TrunkPolicy.for_spec(env.spec, arch=TINY, reduced=False,
+                                 use_kernels=True)
+    params = p_ref.init(jax.random.PRNGKey(0))
+    obs = jax.random.normal(jax.random.PRNGKey(1), (4, 4))
+    lo_r, v_r = p_ref.apply(params, obs)
+    lo_k, v_k = p_ker.apply(params, obs)
+    np.testing.assert_allclose(np.asarray(lo_r), np.asarray(lo_k),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(v_r), np.asarray(v_k),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------- Trainer end-to-end (1 dev)
+_ALGO_KW = {"a3c": {}, "impala": {}, "ppo": {},
+            "dqn": {"replay_capacity": 256, "warmup": 0}}
+
+
+@pytest.mark.parametrize("algo", sorted(_ALGO_KW))
+def test_trunk_trains_through_trainer(algo):
+    """All four algorithms fit the transformer trunk through the
+    unchanged Trainer — --policy trunk is one kwarg, not a fork."""
+    from repro.core.trainer import Trainer, TrainerConfig
+    env = envs.make("cartpole")
+    kw = dict(_ALGO_KW[algo], policy="trunk",
+              trunk_kwargs={"arch": TINY, "reduced": False})
+    cfg = TrainerConfig(algo=algo, iters=2, superstep=2, n_envs=4,
+                        unroll=4, log_every=1, seed=0, algo_kwargs=kw)
+    state, hist = Trainer(env, cfg).fit()
+    assert len(hist) == 2
+    assert all(np.isfinite(r["loss"]) for r in hist), (algo, hist)
+    assert "feat" in (state.params if "online" not in state.params
+                      else state.params["online"])
+
+
+# ----------------------------------- trunk x ZeRO-3 (8 fake devices)
+_TRUNK_ZERO3_SCRIPT = textwrap.dedent("""
+    import json
+    import jax, numpy as np
+    import repro.envs as envs
+    from repro.configs.base import ATTN, ModelConfig
+    from repro.core.distribution import DistPlan
+    from repro.core.trainer import Trainer, TrainerConfig
+
+    TINY = ModelConfig(name="tiny-trunk", family="dense", n_layers=2,
+                       d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                       vocab=64, layer_pattern=(ATTN,))
+    env = envs.make("cartpole")
+
+    def fit(plan):
+        kw = {"policy": "trunk",
+              "trunk_kwargs": {"arch": TINY, "reduced": False}}
+        cfg = TrainerConfig(algo="impala", iters=4, superstep=2,
+                            n_envs=8, unroll=6, plan=plan, log_every=1,
+                            seed=0, algo_kwargs=kw)
+        return Trainer(env, cfg).fit()
+
+    s_flat, h_flat = fit(DistPlan.flat(4))
+    s_z3, h_z3 = fit(DistPlan.zero3(2, 2))
+    l_f = jax.tree_util.tree_leaves(s_flat.params)
+    l_z = jax.tree_util.tree_leaves(s_z3.params)
+    diffs = [float(np.abs(np.asarray(a, np.float64)
+                          - np.asarray(b, np.float64)).max())
+             for a, b in zip(l_f, l_z)]
+    scale = max(float(np.abs(np.asarray(a)).max()) for a in l_f)
+    out = {"n_leaves_match": len(l_f) == len(l_z),
+           "max_abs_diff": max(diffs), "param_scale": scale,
+           "losses_finite": all(np.isfinite(r["loss"]) for r in h_z3),
+           "n_hist": len(h_z3)}
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def test_trunk_zero3_fit_matches_replicated():
+    """The trunk under a zero3-role axis trains to the same params as
+    the flat replicated plan (tight allclose: the gathered-params
+    prologue changes XLA fusion, so a few ulps of drift accumulate over
+    steps — same behavior as the shipped ZeRO-2 axis on this policy;
+    the MLP fits are pinned f32-bitwise in test_trainer.py)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", _TRUNK_ZERO3_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["n_leaves_match"] and out["losses_finite"]
+    assert out["n_hist"] == 4
+    assert out["max_abs_diff"] <= 1e-5 * max(out["param_scale"], 1.0), out
