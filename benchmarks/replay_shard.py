@@ -1,0 +1,187 @@
+"""Sharded replay service benchmark (tentpole PR 9).
+
+Measures what a `replay`-role DistPlan axis buys and costs for DQN's
+prioritized replay (survey §3: Gorila's Replay Memory as its own
+distributed component):
+
+  1. exact pytree accounting: per-device bytes of
+     `TrainState.extra["replay"]` straight off the initialized,
+     mesh-laid-out state — a flat plan carries the FULL capacity-sized
+     buffer per device, a replay axis of size R carries one 1/R chunk
+     per member;
+  2. XLA ground truth from `Trainer.lower(k).compile()
+     .memory_analysis()`: argument bytes (persistent between-superstep
+     state, where the buffer shrink shows up) and live bytes (the
+     sample path all-gathers the (capacity,) priorities per use, a
+     transient cost much smaller than the store rows saved);
+  3. walltime per superstep for both plans (the merge/all-gather cost
+     the capacity scaling buys) plus a per-sample microbench of the
+     flat fused Gumbel-top-k draw vs the sharded per-shard-top-k +
+     global-merge draw at equal global capacity.
+
+The headline row `replay/replay_bytes_shrink` pins the acceptance
+claim: per-device replay bytes ratio <= 0.67 vs the replicated plan at
+2 shards (ideal 1/2 — ptr/size scalars and the priority vector are the
+only non-store bytes). The two plans are bitwise-identical in training
+history (tests/test_replay_service.py pins that); this file records
+the memory/latency trade. Always writes repo-root BENCH_replay.json
+(repro-bench/v1).
+
+Usage: python benchmarks/replay_shard.py [--quick]
+"""
+import argparse
+import os
+import sys
+import time
+
+N_DEVICES = 4  # flat workers=2 baseline vs workers=2 x replay=2
+
+# the plans below need fake host devices; force them before jax loads
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count="
+            f"{N_DEVICES}").strip()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+
+def _setup_path():
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), ".."))
+
+
+if __package__ is None or __package__ == "":
+    _setup_path()
+
+from benchmarks.common import emit, time_fn, write_bench_json  # noqa: E402
+
+
+def _per_device_bytes(tree, n_devices):
+    """Exact per-device bytes of a mesh-laid-out pytree (every leaf
+    carries one leading dim per mesh axis, so total/n_devices is one
+    device's slice)."""
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(tree)
+               ) // n_devices
+
+
+def _xla_bytes(trainer, k):
+    ma = trainer.lower(k).compile().memory_analysis()
+    live = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return live, ma.argument_size_in_bytes
+
+
+def _measure(env, plan, label, quick, capacity):
+    from repro.core.trainer import Trainer, TrainerConfig
+    K = 2 if quick else 4
+    reps = 2 if quick else 5
+    cfg = TrainerConfig(algo="dqn", iters=K, superstep=K, n_envs=8,
+                        unroll=8, plan=plan, log_every=K,
+                        algo_kwargs={"hidden": (64, 64),
+                                     "replay_capacity": capacity,
+                                     "warmup": 1})
+    tr = Trainer(env, cfg)
+    state, sim, delays = tr._init_all()
+    nd = plan.n_devices
+    replay_b = _per_device_bytes(state.extra["replay"], nd)
+    step = tr._superstep(K)
+    its = jnp.arange(K, dtype=jnp.int32)
+    state, sim, m = step(state, sim, its, delays[:K])  # compile
+    jax.block_until_ready(m)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        state, sim, m = step(state, sim, its, delays[:K])
+    jax.block_until_ready(m)
+    wall = (time.perf_counter() - t0) / reps
+    live, arg_b = _xla_bytes(tr, K)
+    return {"label": label, "plan": plan.describe(),
+            "replay_b": replay_b, "wall": wall, "live": live,
+            "arg_b": arg_b, "K": K,
+            "partition_replay": tr.partition_replay}
+
+
+def _sample_latency(capacity, n_shards, batch, quick):
+    """us per prioritized sample draw: flat fused Gumbel-top-k vs the
+    sharded per-shard-top-k + all-gather merge at the same GLOBAL
+    capacity (vmap stands in for the mesh axis — same collectives)."""
+    from repro.core.replay import PrioritizedReplay
+    from repro.core.replay_service import ShardedPrioritizedReplay
+
+    key = jax.random.key(0)
+    example = {"obs": jnp.zeros((4,)), "action": jnp.zeros((), jnp.int32),
+               "reward": jnp.zeros(()), "next_obs": jnp.zeros((4,)),
+               "done": jnp.zeros((), bool)}
+    fill = jax.tree_util.tree_map(
+        lambda a: jnp.ones((capacity,) + a.shape, a.dtype), example)
+    prio = jax.random.uniform(key, (capacity,)) + 0.1
+
+    flat = PrioritizedReplay(capacity, fused=True)
+    fstate = dict(flat.init(example), store=fill, prio=prio,
+                  size=jnp.asarray(capacity, jnp.int32))
+    f_us = time_fn(jax.jit(lambda k: flat.sample(fstate, k, batch)), key,
+                   iters=5 if quick else 20)
+
+    svc = ShardedPrioritizedReplay(capacity, "replay", n_shards)
+    sstate = svc.shard_state(fstate)
+    sampler = jax.jit(jax.vmap(
+        lambda st, k: svc.sample(st, k, batch),
+        in_axes=(0, None), axis_name="replay"))
+    s_us = time_fn(lambda k: sampler(sstate, k), key,
+                   iters=5 if quick else 20)
+    return f_us, s_us
+
+
+def run(quick=False):
+    import repro.envs as envs
+    from repro.core.distribution import DistPlan
+
+    capacity = 2048 if quick else 16384
+    env = envs.make("cartpole")
+    rep = _measure(env, DistPlan.flat(2), "replicated", quick, capacity)
+    shd = _measure(env, DistPlan.replay(2, 2), "sharded", quick, capacity)
+    n_shards = shd["partition_replay"]["n_shards"]
+    rows = []
+    for r in (rep, shd):
+        rows.append((
+            f"replay_shard/{r['label']}", r["wall"] / r["K"] * 1e6,
+            f"plan={r['plan']};replay_per_device_bytes={r['replay_b']};"
+            f"capacity={capacity};xla_live_bytes={r['live']};"
+            f"xla_arg_bytes={r['arg_b']};K={r['K']}"))
+    shrink = shd["replay_b"] / max(rep["replay_b"], 1)
+    rows.append((
+        "replay/replay_bytes_shrink", None,
+        f"ratio={shrink:.4f};threshold=0.67;ideal=1/{n_shards};"
+        f"capacity={capacity};chunk={shd['partition_replay']['chunk']};"
+        f"replicated_bytes={rep['replay_b']};"
+        f"sharded_bytes={shd['replay_b']};"
+        f"xla_arg_saved_bytes={rep['arg_b'] - shd['arg_b']}"))
+
+    batch = 64
+    f_us, s_us = _sample_latency(capacity, 2, batch, quick)
+    rows.append(("replay_sample/flat_fused", f_us,
+                 f"capacity={capacity};batch={batch}"))
+    rows.append(("replay_sample/sharded_merge", s_us,
+                 f"capacity={capacity};batch={batch};n_shards=2;"
+                 f"overhead_ratio={s_us / max(f_us, 1e-9):.3f}"))
+    emit(rows)
+    path = write_bench_json("replay", rows, quick=quick,
+                            n_devices=N_DEVICES, capacity=capacity,
+                            partition_replay=shd["partition_replay"])
+    print(f"# wrote {path}", file=sys.stderr)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes/reps (CI smoke)")
+    run(quick=ap.parse_args().quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,10 @@ class DQN:
     double: bool = True
     prioritized: bool = True
     replay_capacity: int = 10000
-    fused_sampling: bool = False  # Gumbel-top-k kernel path (replay.py)
+    fused_sampling: bool = True  # Gumbel-top-k kernel path (replay.py);
+    #                              False = legacy categorical escape
+    #                              hatch (WITH replacement). Default
+    #                              since the kernel parity pin of PR 3.
     net: object = None  # pluggable q-net adapter (init/apply -> (q, _));
     #                     None = the house MLP below. Lets the trunk
     #                     policy (networks.TrunkPolicy) serve as q-net.
@@ -179,6 +182,10 @@ class DQNAgent(Agent):
                        replay_capacity=replay_capacity, net=net,
                        **algo_kwargs)
         self.policy = _QPolicy(self.dqn)
+        # the Trainer swaps this for a ShardedPrioritizedReplay when its
+        # DistPlan carries an active replay-role axis; init() keeps the
+        # flat host form either way (plan-independent checkpoints)
+        self.replay = self.dqn.replay
         self.opt = adamw(lr)
         self.ring_size = ring_size
         self.batch_size = batch_size
@@ -229,7 +236,7 @@ class DQNAgent(Agent):
                        "reward": flat(traj["reward"]),
                        "next_obs": flat(traj["next_obs"]),
                        "done": flat(traj["done"])}
-        replay = self.dqn.replay
+        replay = self.replay
         rstate = replay.add_batch(state.extra["replay"], transitions)
 
         if self.dqn.prioritized:

@@ -20,7 +20,7 @@ A `DistPlan` is that description as a static pytree-of-config:
     policy-lag delays (repro.core.sync) which ADD across levels: a
     device at mesh coordinates (i0, i1, ...) acts with params
     ``sum_a delay_a[t, i_a]`` learner-updates old;
-  * a per-axis ``role`` — ``data`` (plain data-parallel workers) or
+  * a per-axis ``role`` — ``data`` (plain data-parallel workers),
     ``shard`` (ZeRO-2 learner-state sharding, §5 memory ceiling): over
     a shard axis the Trainer reduce-scatters gradients, applies the
     optimizer update on the local 1/N slice of the flattened
@@ -30,6 +30,17 @@ A `DistPlan` is that description as a static pytree-of-config:
     reduce-scatter), so a sharded plan trains f32-bitwise-identically
     to its replicated counterpart and a shard axis of size 1 is a
     bitwise no-op (pinned in tests/test_trainer.py);
+    ``zero3`` (full ZeRO-3: params additionally stored as 1/N chunks,
+    gathered per use); or ``replay`` (sharded replay service, Gorila's
+    distributed replay memory): the replay group holds ONE logical
+    replay buffer, each member owning a contiguous 1/N capacity slice.
+    Members replicate the data-position rollout/learner compute (the
+    axis adds replay capacity, not sample throughput), insertion
+    routes transitions to the owning shard, sampling merges per-shard
+    Gumbel-top-k candidates over the axis, and priority write-back
+    routes to the owner — draw-for-draw the single-buffer
+    PrioritizedReplay, so the fit stays bitwise the flat data plan
+    (pinned in tests/test_replay_service.py);
   * an optional elastic ``actors=`` schedule: total env-shard counts
     cycled per superstep dispatch. Agents only consume ``traj``, so
     resharding between supersteps is invisible to them.
@@ -54,7 +65,7 @@ _SYNC_EXTRA = {"bsp": lambda ax: 0,
                "asp": lambda ax: ax.max_delay,
                "ssp": lambda ax: min(ax.max_delay, ax.staleness_bound)}
 
-ROLES = ("data", "shard", "zero3")
+ROLES = ("data", "shard", "zero3", "replay")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,16 +76,19 @@ class AxisSpec:
     state sharding: gradients are reduce-scattered over the axis, the
     optimizer update runs on the local 1/size slice of the flattened
     params/opt_state, and params are all-gathered before the next
-    rollout), or `zero3` (full ZeRO-3: params are additionally STORED
+    rollout), `zero3` (full ZeRO-3: params are additionally STORED
     as 1/size chunks in TrainState and all-gathered per use inside
-    learner_step/actor_policy — gather, compute, drop)."""
+    learner_step/actor_policy — gather, compute, drop), or `replay`
+    (sharded replay service: the group holds ONE logical replay buffer,
+    1/size of its capacity per member, while replicating the
+    data-position compute)."""
     name: str
     size: int
     collective: str = "allreduce"   # §3: allreduce | ps | gossip
     sync: str = "bsp"               # §6: bsp | asp | ssp
     max_delay: int = 4              # asp worst-case extra staleness
     staleness_bound: int = 1        # ssp bound on extra staleness
-    role: str = "data"              # data | shard | zero3 (ZeRO states)
+    role: str = "data"              # data | shard | zero3 | replay
 
     def __post_init__(self):
         if not self.name:
@@ -97,12 +111,27 @@ class AxisSpec:
                 f"its gradient mean fuses into the data-parallel "
                 f"reduction so that pmean + local slice IS the "
                 f"reduce-scatter (bitwise the replicated plan)")
+        if self.role == "replay" and self.collective != "allreduce":
+            raise ValueError(
+                f"axis {self.name!r}: a replay-role axis must use the "
+                f"'allreduce' collective (got {self.collective!r}) — "
+                f"the sharded replay service merges per-shard top-k "
+                f"candidates and assembles batches with all-gather/psum "
+                f"over the axis, which presumes the synchronous "
+                f"allreduce domain")
         if self.role == "zero3" and self.sync != "bsp":
             raise ValueError(
                 f"axis {self.name!r}: a zero3-role axis must use 'bsp' "
                 f"sync (got {self.sync!r}) — the gather-per-use params "
                 f"are assembled from one ring slot per shard member, so "
                 f"shard-group members must act in lockstep; spend the "
+                f"staleness budget on the data axes instead")
+        if self.role == "replay" and self.sync != "bsp":
+            raise ValueError(
+                f"axis {self.name!r}: a replay-role axis must use 'bsp' "
+                f"sync (got {self.sync!r}) — replay-group members hold "
+                f"slices of ONE logical buffer, so they must act in "
+                f"lockstep for its contents to stay coherent; spend the "
                 f"staleness budget on the data axes instead")
 
     @property
@@ -143,6 +172,11 @@ class DistPlan:
         if len(shards) > 1:
             raise ValueError(f"at most one shard-role axis is supported "
                              f"(got {shards}); compose a bigger shard "
+                             f"group as one axis instead")
+        replays = [a.name for a in self.axes if a.role == "replay"]
+        if len(replays) > 1:
+            raise ValueError(f"at most one replay-role axis is supported "
+                             f"(got {replays}); compose a bigger replay "
                              f"group as one axis instead")
         if self.actors is not None:
             if not self.actors:
@@ -216,6 +250,26 @@ class DistPlan:
                    actors=None if actors is None else tuple(actors))
 
     @classmethod
+    def replay(cls, n_workers: int, n_shards: int,
+               collective: str = "allreduce", sync: str = "bsp",
+               max_delay: int = 4, staleness_bound: int = 1,
+               actors=None) -> "DistPlan":
+        """Data-parallel workers + a sharded-replay axis (innermost):
+        the replay group holds ONE logical replay buffer, each member
+        owning a contiguous 1/n slice of its capacity (Gorila's
+        distributed replay memory as collectives over the mesh).
+        Members replicate the data-axis rollout/learner compute — the
+        axis adds replay capacity, not sample throughput — so the fit
+        is bitwise the flat `n_workers` plan (tests/test_replay_service
+        pins it)."""
+        return cls(axes=(AxisSpec("workers", n_workers, collective, sync,
+                                  max_delay, staleness_bound),
+                         AxisSpec("replay", n_shards, "allreduce", "bsp",
+                                  max_delay, staleness_bound,
+                                  role="replay")),
+                   actors=None if actors is None else tuple(actors))
+
+    @classmethod
     def parse(cls, spec: str, max_delay: int = 4,
               staleness_bound: int = 1, actors=None) -> "DistPlan":
         """Parse the CLI grammar: comma-separated axes, outermost first,
@@ -224,10 +278,13 @@ class DistPlan:
             hosts=2:allreduce:bsp,workers=2:gossip:asp
             workers=4:allreduce:bsp,shard=2:allreduce:bsp:shard
             workers=4:allreduce:bsp,shard=2:allreduce:bsp:zero3
+            workers=2:allreduce:bsp,replay=2:allreduce:bsp:replay
 
         Role ``shard`` marks the ZeRO-2 learner-state sharding axis,
         ``zero3`` the full ZeRO-3 axis (params stored sharded too,
-        gathered per use); default ``data``. Empty specs, empty
+        gathered per use), ``replay`` the sharded replay-service axis
+        (the group holds ONE logical replay buffer, 1/size per member;
+        allreduce + bsp only); default ``data``. Empty specs, empty
         segments and duplicate axis names raise errors naming the
         offending input."""
         if not spec or not spec.strip():
@@ -309,6 +366,40 @@ class DistPlan:
         ax = self.shard_axis
         return 1 if ax is None else ax.size
 
+    @property
+    def replay_axis(self) -> Optional[AxisSpec]:
+        """The (single, validated) replay-role axis, or None."""
+        for a in self.axes:
+            if a.role == "replay":
+                return a
+        return None
+
+    @property
+    def replay_size(self) -> int:
+        """Replay shard count (1 when no replay axis)."""
+        ax = self.replay_axis
+        return 1 if ax is None else ax.size
+
+    @property
+    def sim_shape(self) -> Tuple[int, ...]:
+        """Mesh shape with the ACTIVE replay axis (size > 1) collapsed
+        to 1 — the env grid: replay-group members replicate the rollout
+        of their data position (the axis adds replay capacity, not
+        sample throughput), so envs shard over the non-replay axes
+        only. A size-1 replay axis stays a plain data axis (the no-op
+        guarantee holds by construction)."""
+        return tuple(1 if (a.role == "replay" and a.size > 1) else a.size
+                     for a in self.axes)
+
+    @property
+    def sim_devices(self) -> int:
+        """Device count of the env grid (`sim_shape`); equals
+        `n_devices` on plans without an active replay axis."""
+        n = 1
+        for s in self.sim_shape:
+            n *= s
+        return n
+
     def describe(self) -> str:
         s = ",".join(f"{a.name}={a.size}:{a.collective}:{a.sync}"
                      + (f":{a.role}" if a.role != "data" else "")
@@ -350,6 +441,22 @@ class DistPlan:
             idx = idx * a.size + jax.lax.axis_index(a.name)
         return idx
 
+    def sim_index(self):
+        """Traced device index over the env grid (`sim_shape`) — the
+        RNG stream id. Like `linear_index` but the ACTIVE replay axis
+        contributes nothing, so every member of a replay group draws
+        exactly the stream of its data position in the flat plan (the
+        group replicates rollouts; only replay STORAGE is sharded). On
+        plans without an active replay axis this is `linear_index`
+        term-for-term — a size-1 replay axis contributes idx*1 + 0."""
+        idx = None
+        for a in self.axes:
+            if a.role == "replay" and a.size > 1:
+                continue
+            i = jax.lax.axis_index(a.name)
+            idx = i if idx is None else idx * a.size + i
+        return jnp.zeros((), jnp.int32) if idx is None else idx
+
     def compile_collectives(self):
         """(grad_tx, param_tx) hooks: per-axis collectives applied
         innermost -> outermost. Consecutive allreduce axes fuse into one
@@ -358,6 +465,14 @@ class DistPlan:
         ring-mixes params on its axis instead."""
         steps = []  # innermost -> outermost: ("allreduce"|"ps", names)
         for ax in reversed(self.axes):
+            if ax.role == "replay" and ax.size > 1:
+                # replay-group members compute identical gradients by
+                # construction (same envs, same RNG streams, same
+                # sampled batch — only replay STORAGE differs), so
+                # there is nothing to exchange; skipping the axis keeps
+                # the reduction association bitwise the flat plan's. A
+                # size-1 replay axis participates like a data axis.
+                continue
             if ax.collective == "allreduce":
                 if steps and steps[-1][0] == "allreduce":
                     # fuse, keeping names outermost-first: the device

@@ -6,7 +6,8 @@ kernels/replay_sample/ref.py. `PrioritizedReplay(fused=True)` samples
 through this seam.
 """
 from repro.kernels.common import interpret_mode
-from repro.kernels.replay_sample.ref import prioritized_sample_ref
+from repro.kernels.replay_sample.ref import (prioritized_sample_ref,
+                                             shard_gumbel_topk_ref)
 
 
 def fused_prioritized_sample(prio, size, gumbel, n, alpha=0.6, beta=0.4,
@@ -17,3 +18,16 @@ def fused_prioritized_sample(prio, size, gumbel, n, alpha=0.6, beta=0.4,
         from repro.kernels.replay_sample.ops import prioritized_sample
         return prioritized_sample(prio, size, gumbel, n, alpha, beta, eps)
     return prioritized_sample_ref(prio, size, gumbel, n, alpha, beta, eps)
+
+
+def shard_gumbel_topk(prio, nvalid, gumbel, k, alpha=0.6, eps=1e-6,
+                      use_kernel=False):
+    """Per-shard candidate draw of the sharded replay service: top-k
+    (score, local index) pairs over ONE shard's (chunk,) priority slice.
+    `nvalid` is the shard-LOCAL valid count (the global max(size, 1)
+    guard stays with the service). Kernel and ref agree bitwise — the
+    seam mirrors fused_prioritized_sample."""
+    if use_kernel and not interpret_mode():
+        from repro.kernels.replay_sample.ops import shard_topk
+        return shard_topk(prio, nvalid, gumbel, k, alpha, eps)
+    return shard_gumbel_topk_ref(prio, nvalid, gumbel, k, alpha, eps)

@@ -1,0 +1,207 @@
+"""Sharded replay service — distributed replay memory as a DistPlan
+axis role (survey §3: Gorila's Replay Memory component; the Ape-X /
+SRL line puts replay on its own sharded service so capacity scales
+with the cluster).
+
+`ShardedPrioritizedReplay` renders that service as collectives over a
+``replay``-role mesh axis: the replay group holds ONE logical
+`PrioritizedReplay` of global `capacity`, each member owning the
+contiguous slice ``[r*chunk, (r+1)*chunk)`` (chunk = capacity/n_shards)
+of its store and priority vector — per-device replay bytes drop to
+~1/n_shards (BENCH_replay.json). Members replicate the data-position
+rollout/learner compute; only replay STORAGE is sharded.
+
+The same `add_batch` / `sample` / `update_priorities` interface as
+`PrioritizedReplay`, draw-for-draw and bitwise equivalent to the
+single-buffer fused path given the same Gumbel draws:
+
+  insert      every member computes the same global ring indices
+              (`_ring_fit` on the replicated ptr); each scatters only
+              the rows that land in its slice (out-of-slice writes are
+              dropped via an OOB sentinel index). The Ape-X max-priority
+              default reduces the global max with `pmax` — max is
+              association-free, so sharding changes nothing bitwise.
+  sample      every member draws the same global (capacity,) Gumbel
+              vector from the shared key and slices its chunk; the
+              PR 3 fused Gumbel-top-k kernel seam (`shard_gumbel_topk`)
+              ranks the local top-k candidates, an `all_gather` merges
+              them shard-major, and one top-n over the (n_shards*k,)
+              candidates picks the batch. top_k is stable (ties break
+              toward the lower input position) and shard-major merge
+              preserves global index order among candidates, so the
+              selected index sequence is bitwise one top-n over the
+              flat score vector. IS weights are normalized against the
+              GLOBAL priority mass: the (capacity,) priorities are
+              all-gathered (zero3-style gather-per-use — transient, not
+              persistent state) and fed through the ref's weight
+              expressions verbatim (`prioritized_weights_ref`). Batch
+              rows are assembled with a masked `psum` — each row is
+              owned by exactly one shard, and x + 0 is exact.
+  write-back  priority updates scatter through the same owner routing
+              as insert.
+
+Layout: per-member in-graph state keeps the flat buffer's dict keys
+({"store", "prio", "ptr", "size"}) with store/prio chunk-sized and
+ptr/size replicated scalars, so `DQNAgent.learner_step`'s warm-gating
+(`rstate["prio"]`) works unchanged. `shard_state` / `unshard_state`
+convert between the flat host form agents init/checkpoint (plan-
+independent) and the host sharded layout the Trainer lays out along
+the replay mesh axis (leading (n_shards,) dim on every leaf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.replay import _ring_fit
+from repro.core.replay_sample import shard_gumbel_topk
+from repro.core.topology import all_gather_shards, psum_select
+from repro.kernels.replay_sample.ref import prioritized_weights_ref
+
+
+@dataclasses.dataclass
+class ShardedPrioritizedReplay:
+    """One logical prioritized buffer of `capacity` slots sharded
+    1/n_shards per member over mesh axis `axis`. Methods run inside
+    shard_map/vmap with `axis` in scope; state is the LOCAL member
+    state (chunk-sized store/prio, replicated ptr/size scalars)."""
+    capacity: int          # GLOBAL capacity (sum over the axis)
+    axis: str              # replay-role mesh axis name
+    n_shards: int
+    alpha: float = 0.6
+    beta: float = 0.4
+    eps: float = 1e-6
+    fused: bool = True     # Pallas kernel for the per-shard top-k
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"replay axis {self.axis!r}: n_shards "
+                             f"{self.n_shards} < 1")
+        if self.capacity % self.n_shards:
+            raise ValueError(
+                f"replay axis {self.axis!r}: replay capacity "
+                f"{self.capacity} is not divisible by the axis size "
+                f"{self.n_shards} — each member owns a contiguous "
+                f"1/{self.n_shards} slice of the logical buffer; pick "
+                f"a capacity that is a multiple of the axis size")
+
+    @property
+    def chunk(self) -> int:
+        return self.capacity // self.n_shards
+
+    # ---- owner routing ------------------------------------------------
+    def _local(self, idx):
+        """Global slot indices -> (local indices with an OOB sentinel
+        for rows another shard owns, ownership mask). `.at[...].set(
+        mode="drop")` then discards exactly the foreign rows."""
+        r = jax.lax.axis_index(self.axis)
+        local = idx - r * self.chunk
+        own = (local >= 0) & (local < self.chunk)
+        return jnp.where(own, local, self.chunk), own
+
+    # ---- PrioritizedReplay interface ---------------------------------
+    def init(self, example: Any):
+        """LOCAL member state (the Trainer instead shards the flat
+        buffer's host init via `shard_state` — this exists for direct
+        vmap/shard_map use and tests)."""
+        store = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((self.chunk,) + jnp.shape(a),
+                                jnp.asarray(a).dtype), example)
+        return {"store": store, "prio": jnp.zeros((self.chunk,)),
+                "ptr": jnp.zeros((), jnp.int32),
+                "size": jnp.zeros((), jnp.int32)}
+
+    def add_batch(self, state, batch, priorities=None):
+        """Identical global ring plan on every member; each writes only
+        its owned rows. Bitwise the flat `PrioritizedReplay.add_batch`
+        per slice."""
+        n = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        idx, batch, priorities, ptr = _ring_fit(state, batch,
+                                                self.capacity, priorities)
+        loc, _ = self._local(idx)
+        store = jax.tree_util.tree_map(
+            lambda s, b: s.at[loc].set(b, mode="drop"),
+            state["store"], batch)
+        if priorities is None:  # new samples get max priority (Ape-X)
+            gmax = jax.lax.pmax(state["prio"].max(), self.axis)
+            priorities = jnp.full((idx.shape[0],), jnp.maximum(gmax, 1.0))
+        prio = state["prio"].at[loc].set(priorities, mode="drop")
+        return {"store": store, "prio": prio, "ptr": ptr,
+                "size": jnp.minimum(state["size"] + n, self.capacity)}
+
+    def sample(self, state, key, n):
+        """-> (batch, GLOBAL idx, is_weights), every member returning
+        the identical values — draw-for-draw the flat fused path given
+        the same key."""
+        r = jax.lax.axis_index(self.axis)
+        # same key on every member -> same global Gumbel vector; each
+        # member consumes its slice, so concatenated scores match the
+        # flat draw bitwise
+        gumbel = jax.random.gumbel(key, (self.capacity,))
+        g_loc = jax.lax.dynamic_slice_in_dim(gumbel, r * self.chunk,
+                                             self.chunk)
+        nvalid = jnp.maximum(state["size"], 1)
+        # the max(size, 1) guard is GLOBAL: slot 0 of shard 0 stands in
+        # when the buffer is empty; other shards contribute only -inf
+        local_valid = jnp.clip(nvalid - r * self.chunk, 0, self.chunk)
+        k = min(n, self.chunk)
+        s, li = shard_gumbel_topk(state["prio"], local_valid, g_loc, k,
+                                  self.alpha, self.eps,
+                                  use_kernel=self.fused)
+        cand_s = all_gather_shards(s, self.axis)            # (R*k,)
+        cand_i = all_gather_shards(li + r * self.chunk, self.axis)
+        _, pos = jax.lax.top_k(cand_s, n)
+        idx = cand_i[pos]
+        idx = jnp.where(jnp.arange(n) < nvalid, idx, idx[0]).astype(
+            jnp.int32)
+        # IS weights against the GLOBAL priority mass: gather-per-use
+        # of the (capacity,) priorities (~1/elem-size of store bytes),
+        # then the ref weight expressions verbatim
+        prio_full = all_gather_shards(state["prio"], self.axis)
+        w = prioritized_weights_ref(prio_full, state["size"], idx,
+                                    self.alpha, self.beta, self.eps)
+        loc, own = self._local(idx)
+        batch = jax.tree_util.tree_map(
+            # foreign rows of the local gather are garbage; psum_select
+            # masks them to zero and sums in the owner's true row
+            lambda s: psum_select(s[loc], own, self.axis),
+            state["store"])
+        return batch, idx, w
+
+    def update_priorities(self, state, idx, td_errors):
+        """Write-back routed to the owning shard; degenerate duplicate
+        indices carry identical values (surplus positions repeat the
+        top draw), so the duplicate scatter is deterministic exactly as
+        on the flat buffer."""
+        loc, _ = self._local(idx)
+        prio = state["prio"].at[loc].set(jnp.abs(td_errors) + self.eps,
+                                         mode="drop")
+        return dict(state, prio=prio)
+
+    # ---- host layout (Trainer / checkpoint seam) ---------------------
+    def shard_state(self, state):
+        """Flat host buffer state (capacity-sized leaves, the form
+        agents init and checkpoints store) -> host sharded layout: every
+        leaf gains a leading (n_shards,) dim for the Trainer to lay out
+        along the replay mesh axis (store (R, chunk, ...), prio
+        (R, chunk), ptr/size tiled (R,))."""
+        R, chunk = self.n_shards, self.chunk
+        store = jax.tree_util.tree_map(
+            lambda s: s.reshape((R, chunk) + s.shape[1:]),
+            state["store"])
+        return {"store": store,
+                "prio": state["prio"].reshape(R, chunk),
+                "ptr": jnp.broadcast_to(state["ptr"], (R,)),
+                "size": jnp.broadcast_to(state["size"], (R,))}
+
+    def unshard_state(self, state):
+        """Inverse of `shard_state`: reassemble the flat host buffer so
+        fit()/checkpoints stay plan-independent."""
+        store = jax.tree_util.tree_map(
+            lambda s: s.reshape((self.capacity,) + s.shape[2:]),
+            state["store"])
+        return {"store": store, "prio": state["prio"].reshape(-1),
+                "ptr": state["ptr"][0], "size": state["size"][0]}

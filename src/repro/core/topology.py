@@ -95,6 +95,23 @@ def all_gather_shards(chunk, axis: str):
     return jax.lax.all_gather(chunk, axis, tiled=True)
 
 
+def psum_select(rows, own, axis: str):
+    """Owner-routed row assembly for the sharded replay service: `rows`
+    (n, ...) is each member's local gather (garbage where it doesn't own
+    the slot), `own` (n,) bool marks the rows this member owns. Each row
+    is owned by exactly ONE member of `axis`, so the masked psum adds
+    the true row to zeros from everyone else — x + 0 is exact, keeping
+    assembly bitwise a local gather from the full buffer. Bool leaves
+    ride through int32 (psum has no bool reduction)."""
+    mask = own.reshape((-1,) + (1,) * (rows.ndim - 1))
+    if jnp.issubdtype(rows.dtype, jnp.bool_):
+        picked = jnp.where(mask, rows, False)
+        return jax.lax.psum(picked.astype(jnp.int32),
+                            axis).astype(jnp.bool_)
+    picked = jnp.where(mask, rows, jnp.zeros((), rows.dtype))
+    return jax.lax.psum(picked, axis)
+
+
 @dataclasses.dataclass(frozen=True)
 class ZeROShardedOptimizer:
     """ZeRO-2 discipline over mesh axis `axis`: wraps any Optimizer-like

@@ -26,7 +26,16 @@ collective (§3) and sync discipline (§6):
     the axis (the pmean half fuses into `grad_tx`), the per-coordinate
     update runs on the local flattened slice, and params all-gather
     before the next rollout — f32-bitwise the replicated plan, and a
-    size-1 shard axis is a bitwise no-op.
+    size-1 shard axis is a bitwise no-op;
+  * sharded replay memory (§3, Gorila's Replay Memory): a `replay`-role
+    axis turns the agent's prioritized buffer into ONE logical buffer
+    over the axis (`repro.core.replay_service`), 1/N capacity per
+    member. The group replicates its data position's rollout/learner
+    compute (envs, RNG streams and grad/metric collectives all range
+    over the non-replay "sim grid"), so the axis adds replay capacity
+    — not sample throughput — and the fit stays f32-bitwise the flat
+    data plan; a size-1 replay axis is left unwrapped (a data axis by
+    construction).
 
 `fit(fused=True)` scans `superstep` iterations (rollout -> learner_step
 -> lag-ring rotate) inside ONE jitted `lax.scan`: the Python loop
@@ -106,16 +115,22 @@ class Trainer:
 
     def __init__(self, env, cfg: TrainerConfig):
         plan = cfg.resolved_plan()
-        if cfg.n_envs % plan.n_devices:
+        # envs shard over the SIMULATION grid (an active replay-role
+        # axis replicates rollouts — it adds replay capacity, not
+        # sample throughput), so divisibility is against sim_devices
+        if cfg.n_envs % plan.sim_devices:
             raise ValueError(f"n_envs={cfg.n_envs} must divide evenly "
-                             f"across the plan's {plan.n_devices} "
-                             f"devices (mesh {plan.mesh_shape})")
+                             f"across the plan's {plan.sim_devices} "
+                             f"simulation devices (mesh "
+                             f"{plan.mesh_shape}, env grid "
+                             f"{plan.sim_shape})")
         if plan.actors is not None:
-            bad = [n for n in plan.actors if n % plan.n_devices]
+            bad = [n for n in plan.actors if n % plan.sim_devices]
             if bad:
                 raise ValueError(
                     f"actors= schedule entries {bad} must divide evenly "
-                    f"across the plan's {plan.n_devices} devices")
+                    f"across the plan's {plan.sim_devices} simulation "
+                    f"devices")
         if cfg.pipeline and plan.actors is not None \
                 and len(set(plan.actors)) > 1:
             raise ValueError(
@@ -159,6 +174,54 @@ class Trainer:
                 f"algorithm {cfg.algo!r} exposes no `.opt` optimizer — "
                 f"required to execute the shard-role axis "
                 f"{shard.name!r} (ZeRO learner-state sharding)")
+        # sharded replay service (replay-role axis): the agent's
+        # prioritized buffer becomes ONE logical buffer over the axis,
+        # 1/N capacity per member, behind the same add_batch/sample/
+        # update_priorities interface. A size-1 replay axis is left
+        # unwrapped — it degenerates to a data axis and the bitwise
+        # no-op guarantee holds BY CONSTRUCTION (sim grid, RNG streams
+        # and collectives all treat it as data).
+        rax = plan.replay_axis
+        self._replay = (rax is not None and rax.size > 1
+                        and plan.n_devices > 1)
+        self._replay_service = None
+        self.partition_replay = None
+        if self._replay:
+            from repro.core.replay import PrioritizedReplay
+            from repro.core.replay_service import ShardedPrioritizedReplay
+            flat_replay = getattr(self.agent, "replay", None)
+            if not isinstance(flat_replay, PrioritizedReplay):
+                raise ValueError(
+                    f"replay axis {rax.name!r}: algorithm {cfg.algo!r} "
+                    f"does not carry a PrioritizedReplay on its learner "
+                    f"hot path (agent.replay) — the sharded replay "
+                    f"service backs that seam only (DQN; ERL's "
+                    f"evolutionary buffer rides its own loop)")
+            if not flat_replay.fused:
+                raise ValueError(
+                    f"replay axis {rax.name!r}: the sharded replay "
+                    f"service decomposes the fused Gumbel-top-k draw "
+                    f"per shard; the legacy categorical path "
+                    f"(fused_sampling=False) has no such decomposition "
+                    f"— drop fused_sampling=False or the replay axis")
+            # capacity % axis size raises here, naming the axis
+            self._replay_service = ShardedPrioritizedReplay(
+                flat_replay.capacity, rax.name, rax.size,
+                alpha=flat_replay.alpha, beta=flat_replay.beta,
+                eps=flat_replay.eps)
+            # swap the seam on the RAW agent (before any ZeRO-3 wrap:
+            # the wrapper forwards learner_step to this inner agent)
+            self.agent.replay = self._replay_service
+            self.partition_replay = {
+                "axis": rax.name, "n_shards": rax.size,
+                "capacity": flat_replay.capacity,
+                "chunk": self._replay_service.chunk}
+        # metrics reduce over the sim grid only: replay-group members
+        # compute identical metrics by construction, and averaging
+        # duplicates would change the float association vs the flat plan
+        self._pmean_axes = tuple(
+            a.name for a in plan.axes
+            if not (a.role == "replay" and a.size > 1))
         self.mesh = None
         self._grad_tx = self._param_tx = None
         if plan.n_devices > 1:
@@ -222,10 +285,13 @@ class Trainer:
         randomness bitwise-identically to the fused scan."""
         key = jax.random.fold_in(self._base_key, it)
         if self.mesh is not None:
-            # per-device RNG stream keyed by the FLAT device index, so a
-            # (hosts, workers) nesting folds the same stream ids as the
-            # flat plan (bitwise-parity invariant)
-            key = jax.random.fold_in(key, self.plan.linear_index())
+            # per-device RNG stream keyed by the FLAT device index of
+            # the SIMULATION grid, so a (hosts, workers) nesting folds
+            # the same stream ids as the flat plan and every member of
+            # a replay group draws its data position's stream
+            # (bitwise-parity invariants; sim_index == linear_index on
+            # plans without an active replay axis)
+            key = jax.random.fold_in(key, self.plan.sim_index())
         return jax.random.split(key)
 
     def _produce(self, state, env_state, it, delay=None):
@@ -255,8 +321,8 @@ class Trainer:
         ep_run, ep_ret = self._episode_stats(ep_run, ep_last,
                                              item["traj"])
         metrics = dict(metrics, episode_return=ep_ret)
-        if self.mesh is not None:
-            metrics = {k: jax.lax.pmean(v, self.plan.axis_names)
+        if self.mesh is not None and self._pmean_axes:
+            metrics = {k: jax.lax.pmean(v, self._pmean_axes)
                        for k, v in metrics.items()}
         return state, ep_run, ep_ret, metrics
 
@@ -559,11 +625,16 @@ class Trainer:
         if self.mesh is None:
             return sim
         shape = self.plan.mesh_shape
-        per = sim["ep_run"].shape[0] // self.plan.n_devices
-        return {"env": jax.tree_util.tree_map(
-                    lambda a: a.reshape(shape + (per,) + a.shape[1:]),
-                    sim["env"]),
-                "ep_run": sim["ep_run"].reshape(shape + (per,)),
+        sshape = self.plan.sim_shape   # active replay axis -> 1
+        per = sim["ep_run"].shape[0] // self.plan.sim_devices
+        # reshape over the sim grid, then broadcast across the replay
+        # axis: replay-group members REPLICATE their data position's
+        # envs (identity when the sim grid is the whole mesh)
+        lay = lambda a: jnp.broadcast_to(
+            a.reshape(sshape + (per,) + a.shape[1:]),
+            shape + (per,) + a.shape[1:])
+        return {"env": jax.tree_util.tree_map(lay, sim["env"]),
+                "ep_run": lay(sim["ep_run"]),
                 "ep_last": jnp.broadcast_to(sim["ep_last"], shape)}
 
     def _init_all(self):
@@ -599,13 +670,50 @@ class Trainer:
         delays = (self.plan.make_delay_schedule(cfg.iters, k_delay)
                   + cfg.policy_lag)
         if self.mesh is not None:
+            rstate = None
+            if self._replay:
+                # pull the flat host replay out of the state (None is an
+                # empty pytree — it rides through either layout path
+                # untouched), shard it 1/N and spread the shards along
+                # the replay mesh axis while everything else replicates
+                rstate = self._replay_service.shard_state(
+                    state.extra["replay"])
+                state = self._swap_replay(state, None)
             state = (self._lay_out_zero3(state) if self._zero3
                      else replicate_for(self.mesh, self.plan.axis_names,
                                         state))
+            if rstate is not None:
+                state = self._swap_replay(state,
+                                          self._spread_replay(rstate))
             sim = self._shard_sim(sim)
         else:
             delays = delays.reshape(cfg.iters)
         return state, sim, delays
+
+    @staticmethod
+    def _swap_replay(state, rstate):
+        extra = dict(state.extra)
+        extra["replay"] = rstate
+        return agent_api.TrainState(state.params, state.opt_state,
+                                    extra, state.ring, state.steps)
+
+    def _spread_replay(self, tree):
+        """Mesh layout for host sharded replay leaves (leading
+        (n_shards,) dim from `shard_state`): distribute that dim along
+        the replay mesh axis — the device at replay index r owns chunk
+        r — and replicate over every other axis (the `_lay_out_zero3`
+        spread pattern)."""
+        names = self.plan.axis_names
+        shape = self.plan.mesh_shape
+        k = names.index(self.plan.replay_axis.name)
+
+        def spread(a):
+            lead = [1] * len(names)
+            lead[k] = a.shape[0]
+            a = a.reshape(tuple(lead) + a.shape[1:])
+            return jnp.broadcast_to(a, shape + a.shape[len(names):])
+
+        return jax.tree_util.tree_map(spread, tree)
 
     def _lay_out_zero3(self, state):
         """Mesh layout for a HOST-layout ZeRO-3 TrainState: chunked
@@ -638,7 +746,7 @@ class Trainer:
         with them); growing resets fresh envs into the new slots. The
         agents never see this — they only consume `traj`."""
         lead = 0 if self.mesh is None else len(self.plan.axes)
-        nd = self.plan.n_devices
+        nd = self.plan.sim_devices
         per_new = n_total // nd
         per_cur = sim["ep_run"].shape[lead]
         if per_new == per_cur:
@@ -748,6 +856,22 @@ class Trainer:
             first = (0,) * len(self.plan.axes)
             take0 = lambda t: jax.tree_util.tree_map(
                 lambda a: a[first], t)
+            rfull = None
+            if self._replay:
+                # reassemble the logical buffer from every replay shard
+                # (row 0 of the other axes) BEFORE the generic device-0
+                # extraction, which would keep only chunk 0 — then
+                # splice the flat host form back in: fit()'s result and
+                # checkpoints stay plan-independent
+                nd = len(self.plan.axes)
+                k = self.plan.axis_names.index(
+                    self.plan.replay_axis.name)
+                idx = tuple(slice(None) if i == k else 0
+                            for i in range(nd))
+                rfull = self._replay_service.unshard_state(
+                    jax.tree_util.tree_map(lambda a: a[idx],
+                                           state.extra["replay"]))
+                state = self._swap_replay(state, None)
             if self._zero3:
                 state = self._unshard_zero3(state, take0)
             elif self.partition is not None:
@@ -761,6 +885,8 @@ class Trainer:
                     take0(state.steps))
             else:
                 state = take0(state)
+            if rfull is not None:
+                state = self._swap_replay(state, rfull)
         return state, history
 
     def _unshard_zero3(self, state, take0):

@@ -60,6 +60,69 @@ def _kernel(prio_ref, gumbel_ref, size_ref, idx_ref, w_ref,
     w_ref[...] = w / jnp.maximum(jnp.max(w), 1e-12)
 
 
+def _topk_kernel(prio_ref, gumbel_ref, nvalid_ref, idx_ref, s_ref,
+                 *, k, C, alpha, eps):
+    """Per-shard candidate draw for the sharded replay service: the
+    masking/score arithmetic of `_kernel` (verbatim, minus the weight
+    epilogue — the service computes weights against the GLOBAL priority
+    mass) followed by k rounds of argmax+mask. `nvalid_ref` is the
+    LOCAL valid count; the global max(size, 1) guard stays with the
+    caller, so an empty shard yields only _NEG candidates."""
+    nvalid = nvalid_ref[0, 0]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
+    valid = col < nvalid
+    logits = jnp.where(valid, alpha * jnp.log(prio_ref[...] + eps), _NEG)
+    scores = jnp.where(valid, logits + gumbel_ref[...], _NEG)
+
+    def draw(i, carry):
+        live, idxs, vals = carry
+        j = jnp.argmax(live).astype(jnp.int32)    # (1,C) flat == column
+        hit = col == j
+        idxs = idxs.at[0, i].set(j)
+        vals = vals.at[0, i].set(jnp.sum(jnp.where(hit, scores, 0.0)))
+        live = jnp.where(hit, _NEG, live)
+        return live, idxs, vals
+
+    _, idxs, vals = jax.lax.fori_loop(
+        0, k, draw, (scores, jnp.zeros((1, k), jnp.int32),
+                     jnp.zeros((1, k), jnp.float32)))
+    # surplus positions (k > nvalid): the argmax loop redraws slot 0
+    # once everything is _NEG, but top_k over the flat vector walks the
+    # remaining -inf slots in index order — indices nvalid, nvalid+1,
+    # ..., i.e. position i holds index i. Rewrite to match the ref
+    # bitwise; the merge never selects these unless the batch itself is
+    # degenerate (overwritten by the caller's global-guard rule anyway).
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+    surplus = pos >= nvalid
+    idxs = jnp.where(surplus, pos, idxs)
+    vals = jnp.where(surplus, _NEG, vals)
+    idx_ref[...] = idxs
+    s_ref[...] = vals
+
+
+@functools.partial(jax.jit, static_argnames=("k", "alpha", "eps"))
+def shard_topk_c(prio, gumbel, nvalid, k, alpha=0.6, eps=1e-6):
+    """prio/gumbel (1,C) f32, nvalid (1,1) int32 LOCAL valid count.
+    -> (scores (1,k) f32 descending with _NEG for invalid, idx (1,k)
+    i32)."""
+    C = prio.shape[1]
+    kernel = functools.partial(_topk_kernel, k=k, C=C, alpha=alpha,
+                               eps=eps)
+    spec = pl.BlockSpec((1, C), lambda: (0, 0))
+    out_spec = pl.BlockSpec((1, k), lambda: (0, 0))
+    idx, s = pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[spec, spec, pl.BlockSpec((1, 1), lambda: (0, 0))],
+        out_specs=(out_spec, out_spec),
+        out_shape=(jax.ShapeDtypeStruct((1, k), jnp.int32),
+                   jax.ShapeDtypeStruct((1, k), jnp.float32)),
+        compiler_params=compiler_params(()),
+        interpret=interpret_mode(),
+    )(prio, gumbel, nvalid)
+    return s, idx
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n", "alpha", "beta", "eps"))
 def prioritized_sample_c(prio, gumbel, size, n, alpha=0.6, beta=0.4,

@@ -1,8 +1,10 @@
-"""Jit'd wrapper: lift (C,) priorities into the fused Pallas
-prioritized-sampling kernel's (1, C) layout."""
+"""Jit'd wrappers: lift (C,) priorities into the fused Pallas
+prioritized-sampling kernels' (1, C) layout."""
 import jax.numpy as jnp
 
-from repro.kernels.replay_sample.kernel import prioritized_sample_c
+from repro.kernels.replay_sample.kernel import (_NEG,
+                                                prioritized_sample_c,
+                                                shard_topk_c)
 
 
 def prioritized_sample(prio, size, gumbel, n, alpha=0.6, beta=0.4,
@@ -15,3 +17,18 @@ def prioritized_sample(prio, size, gumbel, n, alpha=0.6, beta=0.4,
         jnp.asarray(size, jnp.int32).reshape(1, 1),
         n=n, alpha=float(alpha), beta=float(beta), eps=float(eps))
     return idx[0], w[0]
+
+
+def shard_topk(prio, nvalid, gumbel, k, alpha=0.6, eps=1e-6):
+    """prio (chunk,) raw priorities of ONE replay shard, nvalid scalar
+    int32 LOCAL valid count, gumbel (chunk,) this shard's slice of the
+    global Gumbel noise. Returns (scores (k,) f32, idx (k,) int32).
+    The kernel masks with the finite _NEG stand-in; restore -inf here
+    so the candidate scores match shard_gumbel_topk_ref bitwise."""
+    s, idx = shard_topk_c(
+        prio.astype(jnp.float32)[None],
+        gumbel.astype(jnp.float32)[None],
+        jnp.asarray(nvalid, jnp.int32).reshape(1, 1),
+        k=k, alpha=float(alpha), eps=float(eps))
+    s = s[0]
+    return jnp.where(s == jnp.float32(_NEG), -jnp.inf, s), idx[0]

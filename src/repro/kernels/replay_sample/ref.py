@@ -36,10 +36,53 @@ def prioritized_sample_ref(prio, size, gumbel, n, alpha=0.6, beta=0.4,
     _, idx = jax.lax.top_k(scores, n)
     idx = jnp.where(jnp.arange(n) < nvalid, idx, idx[0]).astype(
         jnp.int32)
+    return idx, prioritized_weights_ref(prio, size, idx, alpha, beta,
+                                        eps)
+
+
+def prioritized_weights_ref(prio, size, idx, alpha=0.6, beta=0.4,
+                            eps=1e-6):
+    """IS weights for already-chosen slots `idx` (n,) against the FULL
+    (C,) priority vector — the weight half of prioritized_sample_ref,
+    expression-for-expression (so splitting draw from weighting changes
+    nothing bitwise). The sharded replay service reuses this verbatim:
+    it all-gathers the global priority vector and normalizes against
+    the GLOBAL partition function, keeping sharded IS weights bitwise
+    the single-buffer draw's."""
+    C = prio.shape[0]
+    nvalid = jnp.maximum(size, 1)
+    valid = jnp.arange(C) < nvalid
+    logits = jnp.where(valid, alpha * jnp.log(prio + eps), -jnp.inf)
     # π_idx without materializing softmax(logits): gather the chosen
     # logits, normalize by the (scalar) partition function.
     m = jnp.max(logits)
     Z = jnp.sum(jnp.where(valid, jnp.exp(logits - m), 0.0))
     p = jnp.exp(logits[idx] - m) / Z
     w = (nvalid * p + 1e-12) ** (-beta)
-    return idx, w / jnp.maximum(w.max(), 1e-12)
+    return w / jnp.maximum(w.max(), 1e-12)
+
+
+def shard_gumbel_topk_ref(prio, nvalid_local, gumbel, k, alpha=0.6,
+                          eps=1e-6):
+    """Per-shard half of the sharded draw: the top-k candidate (score,
+    local index) pairs over this shard's (chunk,) slice of priorities
+    and Gumbel noise. Returns (scores (k,) f32, idx (k,) int32), scores
+    descending.
+
+    `nvalid_local` counts the valid slots IN THIS SHARD — the caller
+    derives it as clip(global_nvalid - r*chunk, 0, chunk), keeping the
+    global max(size, 1) guard with the caller, so an empty shard
+    contributes only -inf candidates (there is deliberately NO local
+    guard here). The masking/score expressions are verbatim
+    prioritized_sample_ref's, so concatenating every shard's slice
+    reproduces the flat score vector bitwise; because top_k is stable
+    (ties break toward the lower input position) and candidates are
+    merged shard-major, the global top-n over per-shard top-k
+    candidates selects the identical index sequence as one top-n over
+    the flat vector whenever n <= k per shard."""
+    C = prio.shape[0]
+    valid = jnp.arange(C) < nvalid_local
+    logits = jnp.where(valid, alpha * jnp.log(prio + eps), -jnp.inf)
+    scores = jnp.where(valid, logits + gumbel, -jnp.inf)
+    s, idx = jax.lax.top_k(scores, k)
+    return s, idx.astype(jnp.int32)

@@ -15,14 +15,17 @@ the unified Agent/Trainer API (repro.core.agent / repro.core.trainer):
               outermost first, each
               ``name=size[:collective[:sync[:role]]]`` with collective
               in {ps, allreduce, gossip} (§3), sync in {bsp, asp, ssp}
-              (§6) and role in {data, shard, zero3} — ``shard`` marks
-              the ZeRO-2 learner-state sharding axis (optimizer state
-              partitioned 1/size per device, gradients reduce-
+              (§6) and role in {data, shard, zero3, replay} — ``shard``
+              marks the ZeRO-2 learner-state sharding axis (optimizer
+              state partitioned 1/size per device, gradients reduce-
               scattered, params all-gathered; allreduce only), ``zero3``
               full ZeRO-3 (params stored sharded too, all-gathered per
-              use; allreduce + bsp only), e.g.
-              ``hosts=2:allreduce:bsp,workers=4:gossip:asp`` or
-              ``workers=4:allreduce:bsp,shard=2:allreduce:bsp:zero3``
+              use; allreduce + bsp only), ``replay`` the sharded replay
+              service (ONE logical prioritized buffer over the axis,
+              1/size capacity per member; allreduce + bsp only), e.g.
+              ``hosts=2:allreduce:bsp,workers=4:gossip:asp``,
+              ``workers=4:allreduce:bsp,shard=2:allreduce:bsp:zero3`` or
+              ``workers=2:allreduce:bsp,replay=2:allreduce:bsp:replay``
   --policy    mlp | trunk — the policy network every algorithm trains:
               the house actor-critic MLP or the transformer trunk
               (networks.TrunkPolicy over configs/paper_drl.py's
@@ -123,8 +126,12 @@ def build_parser():
                          "state lives 1/size per device; must use "
                          "allreduce), `zero3` full ZeRO-3 (params "
                          "stored sharded too, all-gathered per use; "
-                         "allreduce + bsp), e.g. 'workers=4:allreduce:"
-                         "bsp,shard=2:allreduce:bsp:zero3'; overrides "
+                         "allreduce + bsp), `replay` the sharded replay "
+                         "service (one logical prioritized buffer, "
+                         "1/size capacity per member; allreduce + bsp), "
+                         "e.g. 'workers=4:allreduce:bsp,shard=2:"
+                         "allreduce:bsp:zero3' or 'workers=2:allreduce:"
+                         "bsp,replay=2:allreduce:bsp:replay'; overrides "
                          "--n-workers/--topology/--sync (which lower "
                          "onto a 1-D plan)")
     ap.add_argument("--actors", default=None, metavar="N,N,...",
@@ -237,6 +244,10 @@ def main(argv=None):
         # name, shard count and flat/padded/chunk element counts; None
         # on unsharded (or size-1 shard) plans
         "partition": trainer.partition,
+        # sharded replay service (replay-role axis): axis name, shard
+        # count and global/chunk slot counts; None when no active
+        # replay axis
+        "partition_replay": trainer.partition_replay,
         "wall_s": round(time.time() - t0, 1), "history": history[-5:]}))
 
 

@@ -5,8 +5,9 @@ pinned headlines: BENCH_zero.json (per-device opt_state bytes shrink
 ~1/shard_size under the ZeRO-2 shard axis; params+opt <= 0.67x under
 the ZeRO-3 axis on the transformer trunk), BENCH_hotpath.json
 (attention seam rows), BENCH_pipeline.json (every pipelined depth
-beats decoupled-serial), and BENCH_serve.json (sane p50/p99 grid, zero
-recompiles after warmup across hot-swaps)."""
+beats decoupled-serial), BENCH_serve.json (sane p50/p99 grid, zero
+recompiles after warmup across hot-swaps), and BENCH_replay.json
+(per-device replay bytes <= 0.67x under the 2-shard replay axis)."""
 import glob
 import json
 import os
@@ -26,10 +27,11 @@ def test_bench_files_exist():
     names = {os.path.basename(p) for p in BENCH_FILES}
     # the committed trajectory: hot path (PR 3), topologies/sync (PR 4),
     # learner sharding (PR 5), actor-learner pipeline (PR 6),
-    # policy serving (PR 7)
+    # policy serving (PR 7), sharded replay (PR 9)
     assert {"BENCH_hotpath.json", "BENCH_topologies.json",
             "BENCH_sync.json", "BENCH_zero.json",
-            "BENCH_pipeline.json", "BENCH_serve.json"} <= names
+            "BENCH_pipeline.json", "BENCH_serve.json",
+            "BENCH_replay.json"} <= names
 
 
 @pytest.mark.parametrize("path", BENCH_FILES,
@@ -102,6 +104,37 @@ def test_zero_bench_pins_zero3_param_state_shrink():
     for name in ("zero_shard/replicated_trunk", "zero_shard/zero3_trunk"):
         assert rows[name]["us_per_call"] > 0, name
         assert "xla_arg_bytes=" in rows[name]["derived"], name
+
+
+def test_replay_bench_pins_bytes_shrink():
+    """Acceptance (PR 9): BENCH_replay.json records per-device replay
+    bytes under the 2-shard replay-role axis at <= 0.67x the replicated
+    plan (ideal 1/2: each member owns one contiguous half of the ONE
+    logical buffer), with XLA argument bytes — the persistent state the
+    compiled superstep carries — corroborating, plus the per-sample
+    latency rows for the flat fused draw vs the sharded merge. Holds
+    for the committed full run and the --quick regeneration CI does
+    before this test."""
+    with open(os.path.join(REPO_ROOT, "BENCH_replay.json")) as f:
+        doc = validate_bench_json(json.load(f))
+    rows = {r["name"]: r for r in doc["rows"]}
+    kv = dict(item.split("=", 1) for item in
+              rows["replay/replay_bytes_shrink"]["derived"].split(";"))
+    part = doc["meta"]["partition_replay"]
+    assert part["axis"] == "replay" and part["n_shards"] == 2
+    assert part["chunk"] * part["n_shards"] == part["capacity"]
+    assert float(kv["threshold"]) == 0.67
+    assert float(kv["ratio"]) <= 0.67, kv
+    assert kv["ideal"] == f"1/{part['n_shards']}"
+    assert int(kv["chunk"]) == part["chunk"]
+    assert int(kv["sharded_bytes"]) < int(kv["replicated_bytes"]), kv
+    assert int(kv["xla_arg_saved_bytes"]) > 0, kv
+    for name in ("replay_shard/replicated", "replay_shard/sharded",
+                 "replay_sample/flat_fused", "replay_sample/sharded_merge"):
+        assert name in rows, sorted(rows)
+        assert rows[name]["us_per_call"] > 0, name
+    assert "overhead_ratio=" in rows["replay_sample/sharded_merge"][
+        "derived"]
 
 
 def test_hotpath_bench_pins_attention_rows():

@@ -185,6 +185,62 @@ def test_plan_parse_zero3_rejections_name_offending_segment():
         assert frag in str(e.value), (spec, str(e.value))
 
 
+def test_plan_parse_replay_role_round_trip():
+    s = "workers=2:allreduce:bsp,replay=2:allreduce:bsp:replay"
+    plan = DistPlan.parse(s)
+    assert plan.axes[1].role == "replay"
+    assert plan.replay_axis is plan.axes[1]
+    assert plan.replay_size == 2
+    assert plan.shard_axis is None  # replay is NOT the shard-role slot
+    # replay members replicate their data position's rollout: the
+    # simulation grid collapses the axis to 1
+    assert plan.sim_shape == (2, 1) and plan.sim_devices == 2
+    assert plan.describe() == s
+    assert DistPlan.parse(plan.describe()) == plan
+
+
+def test_plan_replay_constructor_matches_parse():
+    assert DistPlan.replay(2, 2) == DistPlan.parse(
+        "workers=2:allreduce:bsp,replay=2:allreduce:bsp:replay")
+
+
+def test_plan_replay_composes_with_zero3_in_grammar():
+    """shard/zero3 and replay occupy orthogonal role slots: one plan may
+    carry both (the fit-parity pin lives in tests/test_replay_service)."""
+    plan = DistPlan.parse(
+        "workers=2:allreduce:bsp,shard=2:allreduce:bsp:zero3,"
+        "replay=2:allreduce:bsp:replay")
+    assert plan.shard_axis.name == "shard"
+    assert plan.replay_axis.name == "replay"
+    assert plan.sim_shape == (2, 2, 1) and plan.sim_devices == 4
+
+
+def test_plan_replay_role_validation():
+    # the merge/assembly collectives ride the fused allreduce domain
+    with pytest.raises(ValueError, match="allreduce") as e:
+        AxisSpec("rp", 2, collective="gossip", role="replay")
+    assert "'rp'" in str(e.value)
+    # one logical buffer -> lockstep members only
+    with pytest.raises(ValueError, match="bsp") as e:
+        AxisSpec("rp", 2, collective="allreduce", sync="asp",
+                 role="replay")
+    assert "'rp'" in str(e.value)
+    with pytest.raises(ValueError, match="at most one replay"):
+        DistPlan(axes=(AxisSpec("r1", 2, role="replay"),
+                       AxisSpec("r2", 2, role="replay")))
+
+
+def test_plan_parse_replay_rejections_name_offending_axis():
+    for spec, frag in [
+            ("w=2:allreduce:bsp,r=2:ps:bsp:replay", "'r'"),
+            ("w=2:allreduce:bsp,r=2:allreduce:ssp:replay", "'r'"),
+            ("r1=2:allreduce:bsp:replay,r2=2:allreduce:bsp:replay",
+             "at most one replay")]:
+        with pytest.raises(ValueError) as e:
+            DistPlan.parse(spec)
+        assert frag in str(e.value), (spec, str(e.value))
+
+
 def test_plan_parse_rejects_bad_segments_naming_them():
     for spec, frag in [
             ("", "empty plan"),
@@ -213,7 +269,8 @@ _NAMES = ("a", "b", "hosts", "workers", "shard", "x1", "grp")
 @settings(**SETTINGS)
 def test_plan_parse_describe_round_trip_property(data):
     """parse(describe(plan)) == plan for random axis tuples including
-    roles — the CLI grammar is a faithful serialization."""
+    ALL role slots (shard/zero3 and replay may coexist) — the CLI
+    grammar is a faithful serialization."""
     n_axes = data.draw(st.integers(1, 4), label="n_axes")
     names = data.draw(st.permutations(list(_NAMES)), label="names")
     max_delay = data.draw(st.integers(0, 6), label="max_delay")
@@ -221,17 +278,24 @@ def test_plan_parse_describe_round_trip_property(data):
     shard_at = data.draw(st.one_of(st.none(),
                                    st.integers(0, n_axes - 1)),
                          label="shard_at")
+    replay_at = data.draw(st.one_of(st.none(),
+                                    st.integers(0, n_axes - 1)),
+                          label="replay_at")
+    if replay_at == shard_at:  # orthogonal slots, distinct axes
+        replay_at = None
     axes = []
     for i in range(n_axes):
         if i == shard_at:
             coll = "allreduce"
             role = data.draw(st.sampled_from(("shard", "zero3")),
                              label="shard_role")
+        elif i == replay_at:
+            coll, role = "allreduce", "replay"
         else:
             coll = data.draw(
                 st.sampled_from(("allreduce", "ps", "gossip")))
             role = "data"
-        sync = ("bsp" if role == "zero3"  # zero3 axes are bsp-only
+        sync = ("bsp" if role in ("zero3", "replay")  # bsp-only roles
                 else data.draw(st.sampled_from(("bsp", "asp", "ssp"))))
         axes.append(AxisSpec(
             names[i], data.draw(st.integers(1, 8)), coll, sync,

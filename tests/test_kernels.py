@@ -14,7 +14,9 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.gmm.ops import gmm
 from repro.kernels.gmm.ref import gmm_ref
 from repro.kernels.replay_sample.ops import prioritized_sample
-from repro.kernels.replay_sample.ref import prioritized_sample_ref
+from repro.kernels.replay_sample.ref import (prioritized_sample_ref,
+                                             prioritized_weights_ref,
+                                             shard_gumbel_topk_ref)
 from repro.kernels.vtrace.ops import vtrace as vtrace_k
 from repro.kernels.vtrace.ref import vtrace_ref
 from repro.kernels.wkv6.ops import wkv6
@@ -276,3 +278,132 @@ def test_replay_sample_without_replacement_and_valid(rng):
     w = np.asarray(w)
     assert ((w > 0) & (w <= 1.0 + 1e-6)).all() and w.max() == \
         pytest.approx(1.0)
+
+
+# ------------------------------------- sharded replay merge (PR 9 seam)
+@pytest.mark.parametrize("size", [64, 33, 16, 7, 5, 1, 0])
+def test_shard_topk_merge_matches_flat_sample(size, rng):
+    """Per-shard top-k (shard_gumbel_topk_ref) -> shard-major concat ->
+    global top-n -> degenerate rule -> prioritized_weights_ref is
+    BITWISE the flat prioritized_sample_ref at every fill level —
+    top_k's stable tie-break (lower input position wins) survives the
+    merge because shard-major concat preserves global index order. Ties
+    are forced in both priorities and Gumbel noise to exercise it."""
+    C, R, n = 64, 4, 16
+    chunk = C // R
+    ks = jax.random.split(rng, 2)
+    prio = jnp.abs(jax.random.normal(ks[0], (C,))) + 0.01
+    prio = prio.at[1::7].set(prio[0])          # cross-shard prio ties
+    gumbel = jax.random.gumbel(ks[1], (C,))
+    gumbel = gumbel.at[1::7].set(gumbel[0])    # -> exact score ties
+    fi, fw = prioritized_sample_ref(prio, size, gumbel, n)
+
+    nvalid = max(size, 1)  # GLOBAL guard only: slot 0 of shard 0
+    k = min(n, chunk)
+    cand_s, cand_i = [], []
+    for r in range(R):
+        lv = int(np.clip(nvalid - r * chunk, 0, chunk))  # NO local guard
+        s, li = shard_gumbel_topk_ref(prio[r * chunk:(r + 1) * chunk], lv,
+                                      gumbel[r * chunk:(r + 1) * chunk],
+                                      k)
+        cand_s.append(s)
+        cand_i.append(li + r * chunk)
+    _, pos = jax.lax.top_k(jnp.concatenate(cand_s), n)
+    idx = jnp.concatenate(cand_i)[pos]
+    idx = jnp.where(jnp.arange(n) < nvalid, idx, idx[0]).astype(jnp.int32)
+    w = prioritized_weights_ref(prio, size, idx)
+    assert np.array_equal(np.asarray(fi), np.asarray(idx))
+    assert np.array_equal(np.asarray(fw), np.asarray(w))
+
+
+def test_shard_topk_dispatcher_kernel_flag_off_tpu(rng):
+    """core/replay_sample.py's shard_gumbel_topk dispatcher:
+    use_kernel=True falls back to the ref bitwise off-TPU (interpret-
+    mode guard), same convention as fused_prioritized_sample."""
+    from repro.core.replay_sample import shard_gumbel_topk
+    from repro.kernels.common import interpret_mode
+    assert interpret_mode()  # this suite never runs on TPU
+    ks = jax.random.split(rng, 2)
+    prio = jnp.abs(jax.random.normal(ks[0], (128,))) + 0.01
+    gumbel = jax.random.gumbel(ks[1], (128,))
+    a = shard_gumbel_topk(prio, jnp.int32(70), gumbel, 16,
+                          use_kernel=True)
+    b = shard_gumbel_topk(prio, jnp.int32(70), gumbel, 16,
+                          use_kernel=False)
+    for x, y in zip(a, b):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------- priority write-back round-trips (PR 9)
+@pytest.mark.parametrize("fused", [False, True])
+def test_replay_priority_writeback_round_trip(fused, rng):
+    """sample -> TD errors -> update_priorities -> resample on both flat
+    paths (legacy categorical, fused Gumbel-top-k): the write-back lands
+    |td|+eps exactly on the sampled slots, leaves every other slot
+    untouched, and the resample is deterministic and draws from the
+    updated mass (a slot boosted to dominance must be drawn). TD values
+    are a function of the index so categorical's with-replacement
+    duplicates scatter identical values (deterministic on both paths)."""
+    from repro.core.replay import PrioritizedReplay
+    C, size, n = 128, 100, 32
+    buf = PrioritizedReplay(C, fused=fused)
+    ks = jax.random.split(rng, 3)
+    state = buf.init({"obs": jnp.zeros((3,))})
+    state = buf.add_batch(
+        state, {"obs": jax.random.normal(ks[0], (size, 3))},
+        jnp.abs(jax.random.normal(ks[1], (size,))) + 0.1)
+
+    _, idx, _ = buf.sample(state, ks[2], n)
+    td = (idx.astype(jnp.float32) + 1.0) * 0.1  # duplicate-safe
+    state2 = buf.update_priorities(state, idx, td)
+    prio = np.asarray(state2["prio"])
+    np.testing.assert_allclose(prio[np.asarray(idx)],
+                               np.abs(np.asarray(td)) + buf.eps,
+                               rtol=1e-6)
+    untouched = np.setdiff1d(np.arange(C), np.asarray(idx))
+    np.testing.assert_array_equal(prio[untouched],
+                                  np.asarray(state["prio"])[untouched])
+
+    k2 = jax.random.fold_in(ks[2], 1)
+    b1, i1, w1 = buf.sample(state2, k2, n)
+    b2, i2, w2 = buf.sample(state2, k2, n)
+    for a, b in zip(jax.tree_util.tree_leaves((b1, i1, w1)),
+                    jax.tree_util.tree_leaves((b2, i2, w2))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    boosted = int(np.asarray(idx)[0])
+    state3 = buf.update_priorities(
+        state2, jnp.asarray([boosted]), jnp.asarray([1e6]))
+    _, i3, _ = buf.sample(state3, jax.random.fold_in(k2, 2), n)
+    assert boosted in np.asarray(i3).tolist()
+
+
+def test_replay_writeback_state_identical_across_paths(rng):
+    """Given the SAME sampled indices and TD errors, the categorical and
+    fused buffers and the sharded service write bitwise-identical
+    priority state — update_priorities is path-independent, so a
+    checkpoint taken after write-back is portable across sampling paths
+    and plans."""
+    from repro.core.replay import PrioritizedReplay
+    from repro.core.replay_service import ShardedPrioritizedReplay
+    C, size, n = 64, 50, 16
+    ks = jax.random.split(rng, 3)
+    batch = {"obs": jax.random.normal(ks[0], (size, 3))}
+    prio0 = jnp.abs(jax.random.normal(ks[1], (size,))) + 0.1
+    cat = PrioritizedReplay(C, fused=False)
+    fus = PrioritizedReplay(C, fused=True)
+    svc = ShardedPrioritizedReplay(C, "rp", 4)
+    cstate = cat.add_batch(cat.init({"obs": jnp.zeros((3,))}), batch,
+                           prio0)
+    fstate = fus.add_batch(fus.init({"obs": jnp.zeros((3,))}), batch,
+                           prio0)
+    _, idx, _ = fus.sample(fstate, ks[2], n)
+    td = jax.random.normal(jax.random.fold_in(ks[2], 1), (n,))
+    c2 = cat.update_priorities(cstate, idx, td)
+    f2 = fus.update_priorities(fstate, idx, td)
+    s2 = jax.vmap(svc.update_priorities, in_axes=(0, None, None),
+                  axis_name="rp")(svc.shard_state(fstate), idx, td)
+    np.testing.assert_array_equal(np.asarray(c2["prio"]),
+                                  np.asarray(f2["prio"]))
+    np.testing.assert_array_equal(
+        np.asarray(f2["prio"]),
+        np.asarray(svc.unshard_state(s2)["prio"]))

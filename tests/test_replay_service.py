@@ -1,0 +1,295 @@
+"""Sharded replay service tests (replay-role DistPlan axis).
+
+Unit layer runs `ShardedPrioritizedReplay` under vmap named axes (the
+same collectives shard_map lowers, no fake devices needed) and pins it
+draw-for-draw/bitwise against the flat fused `PrioritizedReplay`; the
+trainer layer spawns an 8-fake-device subprocess and pins the DQN fit
+matrix: size-1 replay axis bitwise no-op, 2-shard replay plan bitwise
+the flat plan, and the zero3+replay composition bitwise the flat plan
+of the same data-device count."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distribution import DistPlan
+from repro.core.replay import PrioritizedReplay
+from repro.core.replay_service import ShardedPrioritizedReplay
+from repro.core.trainer import Trainer, TrainerConfig
+from repro.envs import CartPole
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _example():
+    return {"obs": jnp.zeros((3,)), "action": jnp.zeros((), jnp.int32),
+            "reward": jnp.zeros(()), "done": jnp.zeros((), bool)}
+
+
+def _transitions(key, n):
+    ks = jax.random.split(key, 3)
+    return {"obs": jax.random.normal(ks[0], (n, 3)),
+            "action": jax.random.randint(ks[1], (n,), 0, 4),
+            "reward": jax.random.normal(ks[2], (n,)),
+            "done": jax.random.uniform(ks[0], (n,)) < 0.2}
+
+
+def _vm(svc, fn, n_rest):
+    """Run a service method under the vmap stand-in for the mesh axis:
+    sharded state has a leading (n_shards,) dim, the `n_rest` remaining
+    args are broadcast."""
+    return jax.vmap(fn, in_axes=(0,) + (None,) * n_rest,
+                    axis_name=svc.axis)
+
+
+def _bitwise(t1, t2):
+    l1 = jax.tree_util.tree_leaves(t1)
+    l2 = jax.tree_util.tree_leaves(t2)
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.shape == b.shape and a.dtype == b.dtype, (a, b)
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------- unit (vmap collectives)
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("fill", [0, 1, 7, 33, 64])
+def test_service_sample_matches_flat_fused(n_shards, fill, rng):
+    """Same key -> identical (batch, idx, weights) on every member AND
+    bitwise the flat fused Gumbel-top-k draw, at every fill level incl.
+    empty (slot-0 degenerate) and full."""
+    C, n = 64, 16
+    flat = PrioritizedReplay(C, fused=True)
+    svc = ShardedPrioritizedReplay(C, "rp", n_shards)
+    state = flat.init(_example())
+    if fill:
+        ks = jax.random.split(rng, 2)
+        state = flat.add_batch(state, _transitions(ks[0], fill),
+                               jnp.abs(jax.random.normal(ks[1],
+                                                         (fill,))) + 0.1)
+    fb, fi, fw = flat.sample(state, rng, n)
+    sb, si, sw = _vm(svc, svc.sample, 2)(svc.shard_state(state), rng, n)
+    for r in range(n_shards):  # every member returns the global result
+        _bitwise((fb, fi, fw),
+                 jax.tree_util.tree_map(lambda a, r=r: a[r], (sb, si, sw)))
+
+
+def test_service_add_batch_matches_flat(rng):
+    """Insert path: identical ring plan, owner-routed scatter — the
+    unsharded buffer is bitwise the flat buffer after partial fills,
+    wrap-around and explicit-priority inserts."""
+    C = 32
+    flat = PrioritizedReplay(C, fused=True)
+    svc = ShardedPrioritizedReplay(C, "rp", 4)
+    fstate = flat.init(_example())
+    sstate = svc.shard_state(fstate)
+    add = _vm(svc, svc.add_batch, 2)
+    for i, (n, with_prio) in enumerate([(5, False), (16, True),
+                                        (20, False)]):  # wraps at 41 > 32
+        k = jax.random.fold_in(rng, i)
+        batch = _transitions(k, n)
+        prio = (jnp.abs(jax.random.normal(k, (n,))) + 0.1
+                if with_prio else None)
+        fstate = flat.add_batch(fstate, batch, prio)
+        sstate = (add(sstate, batch, prio) if with_prio
+                  else _vm(svc, lambda s, b: svc.add_batch(s, b), 1)(
+                      sstate, batch))
+        _bitwise(fstate, svc.unshard_state(sstate))
+
+
+def test_service_priority_writeback_round_trip(rng):
+    """sample -> TD errors -> update_priorities -> resample: the
+    write-back routes to the owning shard and the NEXT draw is bitwise
+    the flat fused path's (the round-trip pin of satellite 3, service
+    level)."""
+    C, n = 64, 16
+    flat = PrioritizedReplay(C, fused=True)
+    svc = ShardedPrioritizedReplay(C, "rp", 4)
+    ks = jax.random.split(rng, 4)
+    fstate = flat.add_batch(flat.init(_example()),
+                            _transitions(ks[0], 48))
+    sstate = _vm(svc, lambda s, b: svc.add_batch(s, b), 1)(
+        svc.shard_state(flat.init(_example())), _transitions(ks[0], 48))
+
+    _, fi, _ = flat.sample(fstate, ks[1], n)
+    _, si, _ = _vm(svc, svc.sample, 2)(sstate, ks[1], n)
+    td = jax.random.normal(ks[2], (n,)) * 3.0
+    fstate = flat.update_priorities(fstate, fi, td)
+    sstate = _vm(svc, svc.update_priorities, 2)(sstate, si[0], td)
+    _bitwise(fstate, svc.unshard_state(sstate))
+
+    fb2, fi2, fw2 = flat.sample(fstate, ks[3], n)
+    sb2, si2, sw2 = _vm(svc, svc.sample, 2)(sstate, ks[3], n)
+    _bitwise((fb2, fi2, fw2),
+             jax.tree_util.tree_map(lambda a: a[0], (sb2, si2, sw2)))
+    # the write-back actually moved mass: updated slots carry |td|+eps
+    np.testing.assert_allclose(
+        np.asarray(fstate["prio"])[np.asarray(fi)],
+        np.abs(np.asarray(td)) + flat.eps, rtol=1e-6)
+
+
+def test_service_shard_unshard_round_trip(rng):
+    svc = ShardedPrioritizedReplay(48, "rp", 4)
+    flat = PrioritizedReplay(48, fused=True)
+    state = flat.add_batch(flat.init(_example()), _transitions(rng, 30))
+    _bitwise(state, svc.unshard_state(svc.shard_state(state)))
+    sharded = svc.shard_state(state)
+    assert sharded["prio"].shape == (4, 12)
+    assert sharded["store"]["obs"].shape == (4, 12, 3)
+    assert sharded["ptr"].shape == (4,)  # replicated scalars
+
+
+def test_service_capacity_divisibility_error():
+    with pytest.raises(ValueError, match="not divisible") as e:
+        ShardedPrioritizedReplay(100, "rp", 3)
+    assert "'rp'" in str(e.value) and "100" in str(e.value)
+
+
+# --------------------------------------------- trainer validation errors
+def test_trainer_replay_axis_rejects_unfused_dqn():
+    """A replay axis over the legacy categorical sampler has no
+    per-shard decomposition — the Trainer must refuse, naming the axis
+    and the escape hatch."""
+    with pytest.raises(ValueError, match="fused") as e:
+        Trainer(CartPole(), TrainerConfig(
+            algo="dqn", n_envs=8, plan=DistPlan.replay(1, 2),
+            algo_kwargs={"fused_sampling": False}))
+    assert "'replay'" in str(e.value)
+
+
+def test_trainer_replay_axis_rejects_replayless_algo():
+    """Algorithms without a prioritized buffer on the hot path can't
+    ride a replay axis."""
+    with pytest.raises(ValueError, match="replay") as e:
+        Trainer(CartPole(), TrainerConfig(
+            algo="ppo", n_envs=8, plan=DistPlan.replay(1, 2)))
+    assert "'ppo'" in str(e.value)
+
+
+def test_trainer_replay_axis_rejects_indivisible_capacity():
+    with pytest.raises(ValueError, match="not divisible"):
+        Trainer(CartPole(), TrainerConfig(
+            algo="dqn", n_envs=8, plan=DistPlan.replay(1, 3),
+            algo_kwargs={"replay_capacity": 1000}))
+
+
+# ------------- DQN fit parity matrix (8 fake devices, one subprocess):
+# a replay group REPLICATES its data position's rollout/learner compute
+# and shards only replay storage, so (workers=2, replay=R) must fit
+# bitwise like flat(2) for every R, and composing zero3+replay like
+# flat(4) (shard axes ARE data positions, replay axes are NOT).
+_REPLAY_PARITY_SCRIPT = textwrap.dedent("""
+    import json
+    import math
+    import jax, numpy as np
+    import repro.envs as envs
+    from repro.core.distribution import DistPlan
+    from repro.core.trainer import Trainer, TrainerConfig
+
+    env = envs.make("cartpole")
+    KW = {"hidden": (8,), "replay_capacity": 512, "warmup": 1}
+
+    def fit(plan):
+        cfg = TrainerConfig(algo="dqn", iters=6, superstep=3, n_envs=8,
+                            unroll=6, plan=plan, log_every=1, seed=0,
+                            algo_kwargs=dict(KW))
+        state, hist = Trainer(env, cfg).fit()
+        return jax.device_get(state), hist
+
+    def eq(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.shape != b.shape or a.dtype != b.dtype:
+            return False
+        return bool(np.array_equal(a, b, equal_nan=a.dtype.kind == "f"))
+
+    def bitwise(t1, t2):
+        l1 = jax.tree_util.tree_leaves(t1)
+        l2 = jax.tree_util.tree_leaves(t2)
+        return len(l1) == len(l2) and all(eq(a, b)
+                                          for a, b in zip(l1, l2))
+
+    def hist_eq(h1, h2):
+        def veq(a, b):
+            a, b = float(a), float(b)
+            return a == b or (math.isnan(a) and math.isnan(b))
+        return len(h1) == len(h2) and all(
+            r1.keys() == r2.keys() and all(veq(r1[k], r2[k]) for k in r1)
+            for r1, r2 in zip(h1, h2))
+
+    def cmp(tag, out, a, b, ha, hb):
+        out[tag + "_params"] = bitwise(a.params, b.params)
+        out[tag + "_opt"] = bitwise(a.opt_state, b.opt_state)
+        out[tag + "_replay"] = bitwise(a.extra, b.extra)
+        out[tag + "_ring"] = bitwise(a.ring, b.ring)
+        out[tag + "_hist"] = hist_eq(ha, hb)
+
+    out = {}
+    s2, h2 = fit(DistPlan.flat(2))
+    s21, h21 = fit(DistPlan.parse(
+        "workers=2:allreduce:bsp,replay=1:allreduce:bsp:replay"))
+    s22, h22 = fit(DistPlan.replay(2, 2))
+    s2o, h2o = fit(DistPlan.parse(  # replay axis OUTERMOST
+        "replay=2:allreduce:bsp:replay,workers=2:allreduce:bsp"))
+    cmp("size1", out, s2, s21, h2, h21)
+    cmp("size2", out, s2, s22, h2, h22)
+    cmp("outer", out, s2, s2o, h2, h2o)
+
+    s4, h4 = fit(DistPlan.flat(4))
+    sz, hz = fit(DistPlan.parse(
+        "workers=2:allreduce:bsp,shard=2:allreduce:bsp:zero3,"
+        "replay=2:allreduce:bsp:replay"))
+    cmp("zero3", out, s4, sz, h4, hz)
+    print("RESULT " + json.dumps(out))
+""")
+
+_KEYS = ("params", "opt", "replay", "ring", "hist")
+
+
+@pytest.fixture(scope="module")
+def replay_parity_results():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", _REPLAY_PARITY_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+@pytest.mark.parametrize("part", _KEYS)
+def test_replay_axis_size1_is_bitwise_noop(replay_parity_results, part):
+    """Acceptance: appending a size-1 replay axis to the flat 2-worker
+    plan is a bitwise no-op — params, opt_state, the full replay buffer,
+    actor ring and metric history all match exactly (the axis is left
+    unwrapped, a data axis by construction)."""
+    assert replay_parity_results[f"size1_{part}"], replay_parity_results
+
+
+@pytest.mark.parametrize("part", _KEYS)
+def test_replay_axis_size2_matches_flat_bitwise(replay_parity_results,
+                                                part):
+    """Acceptance: a (workers=2, replay=2) plan — per-shard Gumbel
+    top-k, all-gather merge, psum batch assembly, owner-routed
+    write-back — fits DQN bitwise like the flat 2-worker plan, with the
+    reassembled replay buffer identical; same with the replay axis
+    outermost (placement-independent)."""
+    assert replay_parity_results[f"size2_{part}"], replay_parity_results
+    assert replay_parity_results[f"outer_{part}"], replay_parity_results
+
+
+@pytest.mark.parametrize("part", _KEYS)
+def test_replay_axis_composes_with_zero3(replay_parity_results, part):
+    """Acceptance: (workers=2, shard=2:zero3, replay=2) — learner-state
+    sharding and replay sharding on orthogonal axes — fits bitwise like
+    flat(4): shard axes ARE data positions, replay axes are NOT."""
+    assert replay_parity_results[f"zero3_{part}"], replay_parity_results

@@ -666,10 +666,22 @@ def test_impala_policy_lag_vtrace_beats_naive():
 
 
 def test_dqn_improves_on_gridworld():
+    """Late-training return must clear a near-optimal absolute bar.
+
+    The first logged entry is NOT a random-policy baseline: iteration 0
+    averages only the episodes that happen to finish inside the first
+    unroll (lucky near-goal starts), so it reads ~0.96-0.98 while the
+    true exploration-phase return — visible mid-history once longer
+    episodes complete — sits near 0 or below. Comparing final vs first
+    is therefore meaningless; instead assert the converged policy
+    (eps annealed to its floor) reliably navigates to the goal, which a
+    non-learning policy at the same epsilon cannot (it times out at
+    ~-0.16 per episode)."""
     env = GridWorld(n=4, max_steps=16)
-    cfg = TrainerConfig(algo="dqn", iters=60, superstep=10, n_envs=16,
-                        unroll=8, log_every=20,
-                        algo_kwargs={"warmup": 5, "eps_decay_steps": 40,
+    cfg = TrainerConfig(algo="dqn", iters=100, superstep=10, n_envs=16,
+                        unroll=8, log_every=10,
+                        algo_kwargs={"warmup": 5, "eps_decay_steps": 60,
                                      "target_update": 20})
     _, hist = Trainer(env, cfg).fit()
-    assert hist[-1]["episode_return"] > hist[0]["episode_return"], hist
+    late = [h["episode_return"] for h in hist[-2:]]
+    assert sum(late) / len(late) > 0.9, hist
