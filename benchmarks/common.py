@@ -79,7 +79,11 @@ def validate_bench_json(doc):
 
 def write_bench_json(benchmark, rows, **meta):
     """Write repo-root BENCH_<benchmark>.json in the repro-bench/v1
-    schema; returns the path."""
+    schema; returns the path. `meta.quick` is always stamped
+    (defaulting to False) so tests/test_bench_schema.py can reject
+    committed files produced by an incidental `--quick` regeneration —
+    the committed trajectory must be full-mode runs."""
+    meta.setdefault("quick", False)
     doc = {"schema": SCHEMA, "benchmark": benchmark,
            "backend": jax.default_backend(), "meta": meta,
            "rows": [{"name": name,

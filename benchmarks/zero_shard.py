@@ -27,9 +27,14 @@ padding) for the sharded plan. `zero3/param_state_shrink` pins PR 8's:
 per-device params+opt_state bytes ratio <= 0.67 vs replicated at 2
 shards on the transformer trunk (adamw: 3P replicated -> 1.5P at n=2,
 ideal 0.5), with XLA argument bytes corroborating the persistent-state
-shrink (live bytes are also recorded: gather-per-use trades transient
-temp bytes for the persistent saving, so the live delta can go either
-way at n=2). Always writes repo-root
+shrink. `zero3_layerwise/peak_live_shrink` pins PR 10's: with the
+per-block partition list (one flatten-and-pad entry per trunk
+superblock + the non-block remainder, gathered → run → dropped one at
+a time inside `_run_seq`'s unrolled loop), XLA peak LIVE bytes at 2
+shards drop strictly below the replicated plan — the whole-vector
+gather's full-size temps erased the saving at any N, so this row is
+the first genuinely memory-bound training regime the sharding
+subsystem delivers. Always writes repo-root
 BENCH_zero.json (repro-bench/v1) — the perf trajectory for learner
 sharding starts there.
 
@@ -166,6 +171,14 @@ def run(quick=False):
         f"n_shards={n3};padding_bytes={pad3};"
         f"xla_arg_saved_bytes={rep3['arg_b'] - z3['arg_b']};"
         f"xla_live_saved_bytes={rep3['live'] - z3['live']}"))
+    live_ratio = z3["live"] / max(rep3["live"], 1)
+    rows.append((
+        "zero3_layerwise/peak_live_shrink", None,
+        f"live_ratio={live_ratio:.4f};threshold=0.95;"
+        f"xla_live_bytes_replicated={rep3['live']};"
+        f"xla_live_bytes_zero3={z3['live']};"
+        f"xla_live_saved_bytes={rep3['live'] - z3['live']};"
+        f"entries={z3['partition']['entries']};n_shards={n3}"))
     emit(rows)
     path = write_bench_json("zero", rows, quick=quick,
                             n_devices=N_DEVICES,

@@ -31,6 +31,15 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 
+class PartitionList(list):
+    """Marker type for a *per-block* partition: the optimizer target
+    split into independently shardable entries (layer-wise ZeRO-3).
+    Entry order is transformer blocks first, the non-block remainder
+    last. Each entry runs through `flatten_and_pad` on its own, so a
+    ZeRO-3 wrapper can gather → use → drop one block at a time instead
+    of materializing the whole flattened vector per use."""
+
+
 def flatten_and_pad(tree, n_shards: int):
     """Flatten a pytree to ONE 1-D vector zero-padded to a multiple of
     `n_shards` — the default partitioning for ZeRO-style learner-state
@@ -108,6 +117,32 @@ class Agent:
         partition back in per use. Default (partition == whole tree):
         the rest is empty, so the grafted tree IS `sub`."""
         return sub
+
+    def partition_list(self, part):
+        """Optionally split the optimizer-target pytree `part` (the
+        value `partition_spec` returns, or any congruent tree such as
+        one actor-ring slot) into per-block entries for layer-wise
+        ZeRO-3: a `PartitionList` of [block_0, ..., block_{R-1},
+        remainder]. Default consults the policy's `partition_list` hook
+        (TrunkPolicy: one entry per superblock of the scan stack plus
+        the non-block remainder). Returns None when the policy exposes
+        no block structure — list-free agents (MLP policies, DQN's
+        q-net adapter) then fall back to the single-partition path
+        bitwise-unchanged."""
+        split = getattr(self.policy, "partition_list", None)
+        if split is None:
+            return None
+        parts = split(part)
+        return None if parts is None else PartitionList(parts)
+
+    def merge_partition_list(self, entries, materialize=False):
+        """Inverse of `partition_list` (policy hook). With
+        `materialize=False` the block entries stay a Python list — the
+        lazy form the trunk's `_run_seq` consumes one block at a time
+        (gather → run → drop); `materialize=True` restacks them into
+        the canonical stacked layout for host/checkpoint forms."""
+        return self.policy.merge_partition_list(entries,
+                                                materialize=materialize)
 
     # -- lag-ring helpers ----------------------------------------------
     def _ring_init(self, behavior_params):

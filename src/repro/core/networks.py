@@ -199,6 +199,42 @@ class TrunkPolicy:
             pi, v = pi[0], v[0]
         return pi, v
 
+    # -- layer-wise ZeRO-3 partition hooks -----------------------------
+    def partition_list(self, params):
+        """Split a policy-params pytree into per-block ZeRO-3 entries:
+        one per superblock of the scan stack + the non-block remainder
+        (embed, final_norm, heads, feat, log_std). Accepts both the
+        canonical stacked stack (leading (repeats,) dim) and the lazy
+        list form a previous merge produced. Returns None when the
+        trunk has no scan stack (repeats == 0) — the caller then uses
+        the single-partition path."""
+        lm = params.get("lm") if isinstance(params, dict) else None
+        if not isinstance(lm, dict) or lm.get("stack") is None:
+            return None
+        stack = lm["stack"]
+        if isinstance(stack, (list, tuple)):
+            blocks = list(stack)
+        else:
+            blocks = [jax.tree_util.tree_map(lambda a: a[r], stack)
+                      for r in range(self.lm.repeats)]
+        rest = dict(params, lm=dict(lm, stack=None))
+        return blocks + [rest]
+
+    def merge_partition_list(self, entries, materialize=False):
+        """Inverse of `partition_list`. `materialize=False` keeps the
+        stack as a list of per-block pytrees — `_run_seq` then runs the
+        blocks unrolled, so each block's all-gather is consumed and
+        dropped before the next one materializes; `materialize=True`
+        restacks into the canonical (repeats, ...) layout used by
+        host/checkpoint forms."""
+        blocks, rest = list(entries[:-1]), entries[-1]
+        if materialize:
+            stack = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *blocks)
+        else:
+            stack = blocks
+        return dict(rest, lm=dict(rest["lm"], stack=stack))
+
     _dist_sample = MLPPolicy._dist_sample
     sample = MLPPolicy.sample
     sample_value = MLPPolicy.sample_value

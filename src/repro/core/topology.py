@@ -140,15 +140,34 @@ class ZeROShardedOptimizer:
     `init(params)` returns the inner state over ONE all-zero chunk:
     since every shard's moments start at zero, the Trainer's plain
     replicate-then-split path seeds each device's shard correctly and
-    the chunks diverge naturally as training proceeds."""
+    the chunks diverge naturally as training proceeds.
+
+    Layer-wise ZeRO-3 (`parts`/`merge` set by `ZeRO3Agent` when the
+    agent yields a per-block `PartitionList`): the optimizer target is
+    split into entries, opt_state becomes a LIST of per-entry inner
+    states over one 1/N chunk each, and `apply` runs flatten → slice →
+    update → gather per entry — so no whole-vector params/grads temp is
+    ever formed and each updated block can be consumed and dropped by
+    the trunk's unrolled loop. The per-coordinate update is identical
+    on every coordinate regardless of the chunking, so the entry-wise
+    path stays f32-bitwise the whole-vector path."""
     inner: object
     axis: str
     n_shards: int
+    parts: object = None   # optional pytree -> [entry, ...] splitter
+    merge: object = None   # inverse of `parts` (lazy: stack stays a list)
 
     def init(self, params):
         from repro.core.agent import flatten_and_pad
         if self.n_shards == 1:
             return self.inner.init(params)
+        if self.parts is not None:
+            sts = []
+            for e in self.parts(params):
+                vec, _, _ = flatten_and_pad(e, self.n_shards)
+                sts.append(self.inner.init(
+                    jnp.zeros((vec.size // self.n_shards,), vec.dtype)))
+            return sts
         vec, _, _ = flatten_and_pad(params, self.n_shards)
         chunk = vec.size // self.n_shards
         return self.inner.init(jnp.zeros((chunk,), vec.dtype))
@@ -166,6 +185,19 @@ class ZeROShardedOptimizer:
                 else self.inner.update)
         if pre is not None:
             grads = pre(grads)  # full-gradient transform (global norm)
+        if self.parts is not None:
+            new_entries, new_states = [], []
+            for g_t, p_t, st in zip(self.parts(grads),
+                                    self.parts(params), opt_state):
+                gvec, _, _ = flatten_and_pad(g_t, self.n_shards)
+                pvec, size, unravel = flatten_and_pad(p_t, self.n_shards)
+                g_loc = local_shard(gvec, self.axis, self.n_shards)
+                p_loc = local_shard(pvec, self.axis, self.n_shards)
+                upd, st = bare(g_loc, st, p_loc)
+                full = all_gather_shards(p_loc + upd, self.axis)
+                new_entries.append(unravel(full[:size]))
+                new_states.append(st)
+            return self.merge(new_entries), new_states
         gvec, _, _ = flatten_and_pad(grads, self.n_shards)
         pvec, size, unravel = flatten_and_pad(params, self.n_shards)
         g_loc = local_shard(gvec, self.axis, self.n_shards)
@@ -192,27 +224,40 @@ class ZeRO3Agent:
     chunks too, so per-device params+opt_state+ring bytes all shrink
     toward 1/n.
 
+    The partition is a LIST of entries: one entry when the inner agent
+    has no block structure (`partition_list` returns None — the legacy
+    whole-vector path, bitwise-unchanged), or one entry per transformer
+    superblock + one non-block remainder when it does (layer-wise
+    ZeRO-3). Each entry is flattened-and-padded on its own, so the
+    trunk's `_run_seq` can gather → run → drop ONE block's params at a
+    time and at most one block is ever materialized alongside the
+    activations — the whole-vector gather's full-size temps are what
+    kept peak LIVE bytes flat at any shard count (BENCH_zero.json
+    `zero3_layerwise/peak_live_shrink`).
+
     Wrapper-form TrainState layout (per device, inside shard_map):
 
-        params    {"zero3": (chunk,) this device's param chunk,
+        params    {"zero3": [(chunk_e,) ...] this device's param chunk
+                            per partition entry,
                    "rest":  inner params with the partition removed
                             (`replace_partition(params, None)`)}
-        ring      (ring_size, chunk) chunked actor-param history
+        ring      [(ring_size, chunk_e) ...] chunked actor-param history
         opt_state untouched (the inner opt is already the ZeRO-2
-                  wrapper, so its state is chunk-shaped)
+                  wrapper; layer-wise it is upgraded to the per-entry
+                  `parts` mode, so its state is a list of chunk states)
 
     Every transform is a deterministic concatenation or slice and
-    `all_gather_shards ∘ local_shard` is the identity on the padded
-    vector, so a ZeRO-3 fit is f32-bitwise the replicated fit and a
-    size-1 shard axis is a bitwise no-op (pinned, same discipline as
+    `all_gather_shards ∘ local_shard` is the identity on each padded
+    entry vector, so a ZeRO-3 fit is f32-bitwise the replicated fit and
+    a size-1 shard axis is a bitwise no-op (pinned, same discipline as
     ZeRO-2, in tests/test_trainer.py). `host_state` reassembles a
     host-layout wrapper state back to the inner agent's replicated tree
     form — checkpoints and ParamStore templates stay plan-independent.
 
     `init` returns HOST layout: chunked leaves carry a leading
-    (n_shards,) dim (params["zero3"] (n_shards, chunk); ring
-    (n_shards, ring_size, chunk)) which the Trainer lays out along the
-    shard mesh axis (`Trainer._lay_out_zero3`)."""
+    (n_shards,) dim (params["zero3"] entries (n_shards, chunk_e); ring
+    entries (n_shards, ring_size, chunk_e)) which the Trainer lays out
+    along the shard mesh axis (`Trainer._lay_out_zero3`)."""
 
     def __init__(self, inner, axis: str, n_shards: int):
         self.inner = inner
@@ -221,16 +266,33 @@ class ZeRO3Agent:
         self.policy = inner.policy
         self.ring_size = inner.ring_size
         self.opt = inner.opt
+        self._listwise = False   # resolved in init()
 
     # -- layout plumbing ----------------------------------------------
     def _flatten(self, tree):
         from repro.core.agent import flatten_and_pad
         return flatten_and_pad(tree, self.n_shards)
 
-    def _gather(self, chunk):
-        """chunk (chunk,) -> the partition pytree (gather-per-use)."""
+    def _entries(self, part):
+        """Partition tree -> list of per-entry pytrees (identity list
+        for list-free agents)."""
+        if self._listwise:
+            return list(self.inner.partition_list(part))
+        return [part]
+
+    def _merge(self, entries, materialize=False):
+        """Inverse of `_entries`. Lazy by default (the stack stays a
+        per-block list for the unrolled trunk loop); `materialize=True`
+        restacks into the canonical host/checkpoint layout."""
+        if self._listwise:
+            return self.inner.merge_partition_list(
+                entries, materialize=materialize)
+        return entries[0]
+
+    def _gather(self, chunk, e=0):
+        """chunk (chunk_e,) -> entry `e`'s pytree (gather-per-use)."""
         vec = all_gather_shards(chunk, self.axis)
-        return self._unravel(vec[:self._size])
+        return self._unravels[e](vec[:self._sizes[e]])
 
     def is_wrapper_state(self, state) -> bool:
         """True for wrapper-form TrainStates (chunked params); False for
@@ -246,14 +308,48 @@ class ZeRO3Agent:
     def replace_partition(self, params, sub):
         return self.inner.replace_partition(params, sub)
 
+    def partition_list(self, part):
+        return self.inner.partition_list(part)
+
+    def merge_partition_list(self, entries, materialize=False):
+        return self.inner.merge_partition_list(entries,
+                                               materialize=materialize)
+
     def init(self, key):
         from repro.core.agent import TrainState
         st = self.inner.init(key)
         part = self.inner.partition_spec(st)
-        vec, size, unravel = self._flatten(part)
-        self._size, self._padded = int(size), int(vec.size)
-        self._chunk = self._padded // self.n_shards
-        self._unravel = unravel
+        lst = self.inner.partition_list(part)
+        self._listwise = lst is not None
+        entries = list(lst) if self._listwise else [part]
+        if self._listwise and isinstance(self.inner.opt,
+                                         ZeROShardedOptimizer):
+            # upgrade the ZeRO-2 opt wrapper to per-entry application:
+            # opt_state becomes a list of per-entry chunk states,
+            # re-seeded here (all-zero moments either way, so the
+            # replicate-then-split layout still seeds shards correctly)
+            opt = dataclasses.replace(
+                self.inner.opt, parts=self.inner.partition_list,
+                merge=self.inner.merge_partition_list)
+            self.inner.opt = self.opt = opt
+            st = TrainState(st.params, opt.init(part), st.extra,
+                            st.ring, st.steps)
+        self._sizes, self._paddeds = [], []
+        self._chunks, self._unravels = [], []
+        vecs = []
+        for e in entries:
+            vec, size, unravel = self._flatten(e)
+            vecs.append(vec)
+            self._sizes.append(int(size))
+            self._paddeds.append(int(vec.size))
+            self._chunks.append(int(vec.size) // self.n_shards)
+            self._unravels.append(unravel)
+        self.n_entries = len(entries)
+        # aggregate geometry (reporting, benchmarks, bytes accounting)
+        self._size = sum(self._sizes)
+        self._padded = sum(self._paddeds)
+        self._chunk = sum(self._chunks)
+        self._unravel = self._unravels[0]
         slot0 = jax.tree_util.tree_map(lambda r: r[0], st.ring)
         if (jax.tree_util.tree_structure(part)
                 != jax.tree_util.tree_structure(slot0)):
@@ -261,18 +357,22 @@ class ZeRO3Agent:
                 "ZeRO-3 requires the actor ring to store the same pytree "
                 "as partition_spec (the behavior params ARE the sharded "
                 "partition); got differing structures")
-        ring = jnp.stack([self._flatten(
-            jax.tree_util.tree_map(lambda r: r[d], st.ring))[0]
-            .reshape(self.n_shards, self._chunk)
-            for d in range(self.ring_size)], axis=1)
-        params = {"zero3": vec.reshape(self.n_shards, self._chunk),
+        slot_entries = [self._entries(jax.tree_util.tree_map(
+            lambda r: r[d], st.ring)) for d in range(self.ring_size)]
+        ring = [jnp.stack([self._flatten(slot_entries[d][e])[0]
+                           .reshape(self.n_shards, self._chunks[e])
+                           for d in range(self.ring_size)], axis=1)
+                for e in range(self.n_entries)]
+        params = {"zero3": [v.reshape(self.n_shards, self._chunks[e])
+                            for e, v in enumerate(vecs)],
                   "rest": self.inner.replace_partition(st.params, None)}
         return TrainState(params, st.opt_state, st.extra, ring, st.steps)
 
     def learner_step(self, state, traj, boot_obs, key,
                      grad_tx=None, param_tx=None):
         from repro.core.agent import TrainState
-        sub = self._gather(state.params["zero3"])
+        sub = self._merge([self._gather(c, e) for e, c
+                           in enumerate(state.params["zero3"])])
         params = self.inner.replace_partition(state.params["rest"], sub)
         # dummy full ring: the inner step's ring push is discarded (the
         # chunk ring below is authoritative), so XLA DCEs the broadcast
@@ -283,10 +383,12 @@ class ZeRO3Agent:
             TrainState(params, state.opt_state, state.extra, ring,
                        state.steps),
             traj, boot_obs, key, grad_tx=grad_tx, param_tx=param_tx)
-        nvec, _, _ = self._flatten(self.inner.partition_spec(new))
-        chunk = local_shard(nvec, self.axis, self.n_shards)
-        ring_c = jnp.roll(state.ring, 1, axis=0).at[0].set(chunk)
-        params = {"zero3": chunk,
+        nchunks = [local_shard(self._flatten(e)[0], self.axis,
+                               self.n_shards)
+                   for e in self._entries(self.inner.partition_spec(new))]
+        ring_c = [jnp.roll(r, 1, axis=0).at[0].set(c)
+                  for r, c in zip(state.ring, nchunks)]
+        params = {"zero3": nchunks,
                   "rest": self.inner.replace_partition(new.params, None)}
         return (TrainState(params, new.opt_state, new.extra, ring_c,
                            new.steps), metrics)
@@ -298,7 +400,8 @@ class ZeRO3Agent:
             # via ParamStore.publish_from_state) — inner handles it
             return self.inner.actor_policy(state, delay)
         d = jnp.minimum(jnp.asarray(delay, jnp.int32), self.ring_size - 1)
-        sub = self._gather(jnp.take(state.ring, d, axis=0))
+        sub = self._merge([self._gather(jnp.take(r, d, axis=0), e)
+                           for e, r in enumerate(state.ring)])
         ring1 = jax.tree_util.tree_map(lambda p: p[None], sub)
         # delay resolved above; inner may still read steps (DQN ε-anneal)
         return self.inner.actor_policy(
@@ -314,12 +417,16 @@ class ZeRO3Agent:
         from repro.core.agent import TrainState
         if not self.is_wrapper_state(state):
             return state
-        sub = self._unravel(
-            state.params["zero3"].reshape(-1)[:self._size])
+        subs = [self._unravels[e](c.reshape(-1)[:self._sizes[e]])
+                for e, c in enumerate(state.params["zero3"])]
+        sub = self._merge(subs, materialize=True)
         params = self.inner.replace_partition(state.params["rest"], sub)
-        slots = [self._unravel(
-            state.ring[:, d, :].reshape(-1)[:self._size])
-            for d in range(self.ring_size)]
+        slots = []
+        for d in range(self.ring_size):
+            es = [self._unravels[e](
+                state.ring[e][:, d, :].reshape(-1)[:self._sizes[e]])
+                for e in range(self.n_entries)]
+            slots.append(self._merge(es, materialize=True))
         ring = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *slots)
         opt = getattr(self.inner.opt, "inner", self.inner.opt)
         return TrainState(params, opt.init(sub), state.extra, ring,

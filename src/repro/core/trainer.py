@@ -156,6 +156,7 @@ class Trainer:
         # as the nested data-plan parity pinned in tests).
         self.partition = None    # populated by _init_all when sharded
         self._part_unravel = None
+        self._part_unravels = None
         shard = plan.shard_axis
         self._sharded = (shard is not None and shard.size > 1
                          and plan.n_devices > 1)
@@ -184,6 +185,14 @@ class Trainer:
         rax = plan.replay_axis
         self._replay = (rax is not None and rax.size > 1
                         and plan.n_devices > 1)
+        if self._replay and cfg.pipeline:
+            raise ValueError(
+                f"pipeline=True cannot combine with the replay-role "
+                f"axis {rax.name!r}: the decoupled superstep reorders "
+                f"the add_batch/sample interleaving against the "
+                f"sharded buffer and that combination has no validated "
+                f"parity — use the fused superstep (pipeline=False) or "
+                f"drop the replay axis")
         self._replay_service = None
         self.partition_replay = None
         if self._replay:
@@ -643,13 +652,20 @@ class Trainer:
         state = self.agent.init(k_init)
         shard = self.plan.shard_axis
         if self._zero3:
-            # the wrapper's init already ran flatten_and_pad and caches
-            # the partition geometry + unravel on itself
-            self._part_unravel = self.agent._unravel
+            # the wrapper's init already ran flatten_and_pad PER ENTRY
+            # (one entry per transformer block + remainder when the
+            # agent yields a partition list; a single entry otherwise)
+            # and caches the geometry + unravels on itself
+            self._part_unravels = list(self.agent._unravels)
+            self._part_unravel = self._part_unravels[0]
             self.partition = {
                 "axis": shard.name, "n_shards": shard.size,
                 "size": self.agent._size, "padded": self.agent._padded,
-                "chunk": self.agent._chunk}
+                "chunk": self.agent._chunk,
+                "sizes": list(self.agent._sizes),
+                "chunks": list(self.agent._chunks),
+                "entries": self.agent.n_entries,
+                "listwise": self.agent._listwise}
         elif self._sharded:
             # record the flatten-and-pad partition of the optimizer
             # target (agent.partition_spec) for reporting, benchmarks
@@ -658,10 +674,12 @@ class Trainer:
             vec, size, unravel = flatten_and_pad(
                 self.agent.partition_spec(state), shard.size)
             self._part_unravel = unravel
+            self._part_unravels = [unravel]
             self.partition = {
                 "axis": shard.name, "n_shards": shard.size,
                 "size": int(size), "padded": int(vec.size),
-                "chunk": int(vec.size // shard.size)}
+                "chunk": int(vec.size // shard.size),
+                "listwise": False}
         # simulation-side carry: batched env state + episode accounting
         # (ep_last starts NaN: no episode has finished yet)
         sim = {"env": self.env.reset_batch(k_env, cfg.n_envs),
@@ -717,10 +735,11 @@ class Trainer:
 
     def _lay_out_zero3(self, state):
         """Mesh layout for a HOST-layout ZeRO-3 TrainState: chunked
-        leaves (params["zero3"] (n_shards, chunk); ring (n_shards,
-        ring_size, chunk)) distribute their leading dim along the shard
-        mesh axis — device at shard index i owns chunk i — while every
-        other leaf replicates like `replicate_for`."""
+        leaves (params["zero3"] entries (n_shards, chunk_e); ring
+        entries (n_shards, ring_size, chunk_e)) distribute their
+        leading dim along the shard mesh axis — device at shard index i
+        owns chunk i — while every other leaf replicates like
+        `replicate_for`."""
         names = self.plan.axis_names
         shape = self.plan.mesh_shape
         k = names.index(self.partition["axis"])
@@ -734,10 +753,12 @@ class Trainer:
         repl = lambda t: jax.tree_util.tree_map(
             lambda p: jnp.broadcast_to(p, shape + p.shape), t)
         return agent_api.TrainState(
-            {"zero3": spread(state.params["zero3"]),
+            {"zero3": jax.tree_util.tree_map(
+                spread, state.params["zero3"]),
              "rest": repl(state.params["rest"])},
             repl(state.opt_state), repl(state.extra),
-            spread(state.ring), repl(state.steps))
+            jax.tree_util.tree_map(spread, state.ring),
+            repl(state.steps))
 
     # ---- elastic actor shards (plan.actors) ---------------------------
     def _reshard_envs(self, sim, n_total, key):
@@ -891,22 +912,31 @@ class Trainer:
 
     def _unshard_zero3(self, state, take0):
         """Reassemble a mesh-layout ZeRO-3 TrainState into the inner
-        agent's replicated tree form (checkpoint shape): param and ring
-        chunks are gathered along the shard axis (row 0 of every data
-        axis), trimmed of padding and unraveled; opt_state goes through
-        the ZeRO-2 reassembly; rest/extra/steps come from device 0."""
+        agent's replicated tree form (checkpoint shape): each partition
+        entry's param and ring chunks are gathered along the shard axis
+        (row 0 of every data axis), trimmed of padding and unraveled,
+        then merged (restacking the per-block entries when the agent is
+        layer-wise); opt_state goes through the ZeRO-2/per-entry
+        reassembly; rest/extra/steps come from device 0."""
         p = self.partition
         nd = len(self.plan.axes)
         k = self.plan.axis_names.index(p["axis"])
         idx = tuple(slice(None) if i == k else 0 for i in range(nd))
-        sub = self._part_unravel(
-            state.params["zero3"][idx].reshape(-1)[:p["size"]])
+        merge = (lambda es: self.agent.merge_partition_list(
+            es, materialize=True)) if p["listwise"] else (
+            lambda es: es[0])
+        E = p["entries"]
+        sub = merge([self._part_unravels[e](
+            state.params["zero3"][e][idx].reshape(-1)[:p["sizes"][e]])
+            for e in range(E)])
         params = self.agent.replace_partition(
             take0(state.params["rest"]), sub)
-        ringmat = state.ring[idx]        # (n_shards, ring_size, chunk)
-        slots = [self._part_unravel(
-            ringmat[:, d, :].reshape(-1)[:p["size"]])
-            for d in range(self.agent.ring_size)]
+        slots = []
+        for d in range(self.agent.ring_size):
+            # ring entry e at idx: (n_shards, ring_size, chunk_e)
+            slots.append(merge([self._part_unravels[e](
+                state.ring[e][idx][:, d, :].reshape(-1)[:p["sizes"][e]])
+                for e in range(E)]))
         ring = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *slots)
         return agent_api.TrainState(
             params, self._unshard_opt_state(state.opt_state),
@@ -921,15 +951,39 @@ class Trainer:
         target's pytree shape; other leaves (e.g. the step counter)
         come from device 0. A shard axis of size 1 therefore returns
         bitwise the replicated-trainer opt_state — checkpoints keep
-        their shape across plans."""
+        their shape across plans.
+
+        Layer-wise ZeRO-3 opt_states are a LIST over partition entries
+        of inner states (one chunk per entry): congruent leaf positions
+        are gathered per entry, unraveled with that entry's unravel and
+        merged back into the partition-shaped tree (scalars like the
+        step counter are identical across entries — entry 0 is
+        taken)."""
         p = self.partition
         nd = len(self.plan.axes)
         k = self.plan.axis_names.index(p["axis"])
+        idx = tuple(slice(None) if i == k else 0 for i in range(nd))
+
+        if p.get("listwise"):
+            E = p["entries"]
+            flats = [jax.tree_util.tree_flatten(opt_state[e])
+                     for e in range(E)]
+            leaves0, treedef = flats[0]
+            out = []
+            for i in range(len(leaves0)):
+                per = [flats[e][0][i] for e in range(E)]
+                if all(per[e].shape[nd:] == (p["chunks"][e],)
+                       for e in range(E)):
+                    out.append(self.agent.merge_partition_list(
+                        [self._part_unravels[e](
+                            per[e][idx].reshape(-1)[:p["sizes"][e]])
+                         for e in range(E)], materialize=True))
+                else:
+                    out.append(per[0][(0,) * nd])
+            return jax.tree_util.tree_unflatten(treedef, out)
 
         def leaf(a):
             if a.shape[nd:] == (p["chunk"],):
-                idx = tuple(slice(None) if i == k else 0
-                            for i in range(nd))
                 return self._part_unravel(
                     a[idx].reshape(-1)[:p["size"]])
             return a[(0,) * nd]

@@ -28,6 +28,28 @@ from repro.models.layers import (init_norm, apply_norm, init_embed,
                                  embed_tokens, unembed, dense_init)
 
 
+@jax.custom_vjp
+def _sequence_barrier(x):
+    """Identity with an XLA optimization barrier in both the forward
+    and backward pass. `jax.lax.optimization_barrier` has no AD rule,
+    but the layer-wise ZeRO-3 loop needs one inside `value_and_grad`:
+    without it XLA hoists every block's all-gather ahead of the loop
+    and re-creates the whole-vector live peak the per-block partition
+    exists to avoid."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _sequence_barrier_fwd(x):
+    return _sequence_barrier(x), None
+
+
+def _sequence_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_sequence_barrier.defvjp(_sequence_barrier_fwd, _sequence_barrier_bwd)
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelOpts:
     dtype: str = "bfloat16"
@@ -179,9 +201,31 @@ class LanguageModel:
             body = sb_body
             if self.opts.remat and not cache_capacity:
                 body = jax.checkpoint(sb_body, prevent_cse=False)
-            (x, aux), sc = jax.lax.scan(body, (x, aux), params["stack"])
-            if cache_capacity:
-                caches["stack"] = sc
+            stack = params["stack"]
+            if isinstance(stack, (list, tuple)):
+                # layer-wise ZeRO-3: the superblocks arrive as a list
+                # of per-block pytrees (each typically the all-gather
+                # of one 1/N chunk). Run them unrolled so each gather
+                # is consumed and dropped before the next block's
+                # params materialize; the optimization barrier ties
+                # block r's params to block r-1's output, so XLA
+                # cannot hoist every gather ahead of the loop and
+                # re-create the whole-vector peak.
+                carry, sc = (x, aux), []
+                for r, sb_params in enumerate(stack):
+                    if r:
+                        sb_params, carry = _sequence_barrier(
+                            (sb_params, carry))
+                    carry, cs = body(carry, sb_params)
+                    sc.append(cs)
+                x, aux = carry
+                if cache_capacity:
+                    caches["stack"] = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs), *sc)
+            else:
+                (x, aux), sc = jax.lax.scan(body, (x, aux), stack)
+                if cache_capacity:
+                    caches["stack"] = sc
 
         if self.tail_len:
             base = self.prefix_len + self.repeats * self.period

@@ -3,7 +3,8 @@ the repro-bench/v1 shape (benchmarks/common.validate_bench_json), so
 the machine-readable perf trajectory can't silently rot; plus the
 pinned headlines: BENCH_zero.json (per-device opt_state bytes shrink
 ~1/shard_size under the ZeRO-2 shard axis; params+opt <= 0.67x under
-the ZeRO-3 axis on the transformer trunk), BENCH_hotpath.json
+the ZeRO-3 axis on the transformer trunk; peak live bytes strictly
+below replicated under the layer-wise gather), BENCH_hotpath.json
 (attention seam rows), BENCH_pipeline.json (every pipelined depth
 beats decoupled-serial), BENCH_serve.json (sane p50/p99 grid, zero
 recompiles after warmup across hot-swaps), and BENCH_replay.json
@@ -11,6 +12,7 @@ recompiles after warmup across hot-swaps), and BENCH_replay.json
 import glob
 import json
 import os
+import subprocess
 import sys
 
 import pytest
@@ -104,6 +106,55 @@ def test_zero_bench_pins_zero3_param_state_shrink():
     for name in ("zero_shard/replicated_trunk", "zero_shard/zero3_trunk"):
         assert rows[name]["us_per_call"] > 0, name
         assert "xla_arg_bytes=" in rows[name]["derived"], name
+
+
+def test_zero_bench_pins_layerwise_peak_live_shrink():
+    """Acceptance (PR 10): with the per-block partition list (gather →
+    run → drop one trunk superblock at a time, plus the per-entry
+    optimizer apply), XLA peak LIVE bytes — argument + output + temp −
+    donated alias of the compiled superstep — at 2 shards land strictly
+    BELOW the replicated plan on the transformer trunk. This is the row
+    the whole-vector gather could never produce: its full-size temps
+    offset the argument saving at any shard count. Holds for the
+    committed full run and the --quick regeneration CI does before this
+    test."""
+    with open(os.path.join(REPO_ROOT, "BENCH_zero.json")) as f:
+        doc = validate_bench_json(json.load(f))
+    rows = {r["name"]: r for r in doc["rows"]}
+    kv = dict(item.split("=", 1) for item in
+              rows["zero3_layerwise/peak_live_shrink"]["derived"].split(";"))
+    assert float(kv["threshold"]) == 0.95
+    assert float(kv["live_ratio"]) <= 0.95, kv
+    assert (int(kv["xla_live_bytes_zero3"])
+            < int(kv["xla_live_bytes_replicated"])), kv
+    assert int(kv["xla_live_saved_bytes"]) > 0, kv
+    # the trunk partitions layer-wise: R superblocks + the remainder
+    assert int(kv["entries"]) >= 2, kv
+    part = doc["meta"]["partition_zero3"]
+    assert part["listwise"] is True, part
+    assert part["entries"] == int(kv["entries"])
+    assert len(part["sizes"]) == part["entries"]
+    assert sum(part["sizes"]) == part["size"], part
+
+
+def test_committed_bench_files_are_full_mode():
+    """The committed perf trajectory must be full-mode runs: every
+    BENCH_*.json blob at HEAD whose meta carries the `quick` stamp must
+    have it False. CI regenerates the working-tree files with --quick
+    before running tests, so this guard reads `git show HEAD:<file>` —
+    the committed state — not the (legitimately quick) working tree.
+    Files written before the stamp existed pass (key absent)."""
+    for path in BENCH_FILES:
+        rel = os.path.relpath(path, REPO_ROOT)
+        proc = subprocess.run(
+            ["git", "show", f"HEAD:{rel}"], cwd=REPO_ROOT,
+            capture_output=True, text=True)
+        if proc.returncode != 0:
+            continue  # new file not yet at HEAD (or not a git checkout)
+        doc = json.loads(proc.stdout)
+        assert doc.get("meta", {}).get("quick") is not True, (
+            f"{rel} was committed from a --quick run; regenerate it "
+            f"with the full benchmark before committing")
 
 
 def test_replay_bench_pins_bytes_shrink():

@@ -81,6 +81,31 @@ def test_service_sample_matches_flat_fused(n_shards, fill, rng):
                  jax.tree_util.tree_map(lambda a, r=r: a[r], (sb, si, sw)))
 
 
+@pytest.mark.parametrize("n", [24, 64])
+@pytest.mark.parametrize("fill", [0, 7, 33, 64])
+def test_service_sample_n_exceeding_chunk_matches_flat(n, fill, rng):
+    """Draws larger than one shard's chunk (n > capacity//n_shards): the
+    per-shard top-k clamps to k = min(n, chunk) candidates and the
+    all-gather merge must still reproduce the flat fused draw
+    draw-for-draw — including n == capacity, where every slot is a
+    candidate. Guards the clamp + stable-merge tie ordering that the
+    equal-size case never exercises."""
+    C, n_shards = 64, 4  # chunk = 16 < n
+    flat = PrioritizedReplay(C, fused=True)
+    svc = ShardedPrioritizedReplay(C, "rp", n_shards)
+    state = flat.init(_example())
+    if fill:
+        ks = jax.random.split(rng, 2)
+        state = flat.add_batch(state, _transitions(ks[0], fill),
+                               jnp.abs(jax.random.normal(ks[1],
+                                                         (fill,))) + 0.1)
+    fb, fi, fw = flat.sample(state, rng, n)
+    sb, si, sw = _vm(svc, svc.sample, 2)(svc.shard_state(state), rng, n)
+    for r in range(n_shards):
+        _bitwise((fb, fi, fw),
+                 jax.tree_util.tree_map(lambda a, r=r: a[r], (sb, si, sw)))
+
+
 def test_service_add_batch_matches_flat(rng):
     """Insert path: identical ring plan, owner-routed scatter — the
     unsharded buffer is bitwise the flat buffer after partial fills,
@@ -180,6 +205,19 @@ def test_trainer_replay_axis_rejects_indivisible_capacity():
             algo_kwargs={"replay_capacity": 1000}))
 
 
+def test_trainer_replay_axis_rejects_pipeline():
+    """pipeline=True reorders the add_batch/sample interleaving of the
+    decoupled superstep against the sharded buffer — no validated
+    parity, so the Trainer must refuse up front, naming the axis and
+    the escape hatch (matching the zero3 x pipeline precedent)."""
+    with pytest.raises(ValueError, match="pipeline") as e:
+        Trainer(CartPole(), TrainerConfig(
+            algo="dqn", n_envs=8, plan=DistPlan.replay(1, 2),
+            pipeline=True))
+    assert "'replay'" in str(e.value)
+    assert "pipeline=False" in str(e.value)
+
+
 # ------------- DQN fit parity matrix (8 fake devices, one subprocess):
 # a replay group REPLICATES its data position's rollout/learner compute
 # and shards only replay storage, so (workers=2, replay=R) must fit
@@ -266,6 +304,7 @@ def replay_parity_results():
     return json.loads(line[len("RESULT "):])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("part", _KEYS)
 def test_replay_axis_size1_is_bitwise_noop(replay_parity_results, part):
     """Acceptance: appending a size-1 replay axis to the flat 2-worker
@@ -275,6 +314,7 @@ def test_replay_axis_size1_is_bitwise_noop(replay_parity_results, part):
     assert replay_parity_results[f"size1_{part}"], replay_parity_results
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("part", _KEYS)
 def test_replay_axis_size2_matches_flat_bitwise(replay_parity_results,
                                                 part):
@@ -287,6 +327,7 @@ def test_replay_axis_size2_matches_flat_bitwise(replay_parity_results,
     assert replay_parity_results[f"outer_{part}"], replay_parity_results
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("part", _KEYS)
 def test_replay_axis_composes_with_zero3(replay_parity_results, part):
     """Acceptance: (workers=2, shard=2:zero3, replay=2) — learner-state

@@ -336,6 +336,7 @@ def plan_matrix_results():
     return json.loads(line[len("RESULT "):])
 
 
+@pytest.mark.slow
 def test_plan_matrix_flat_vs_nested_bitwise_parity(plan_matrix_results):
     """Acceptance: a (hosts=2, workers=2) plan with intra-host allreduce
     + inter-host allreduce under bsp trains bitwise-identically to the
@@ -345,6 +346,7 @@ def test_plan_matrix_flat_vs_nested_bitwise_parity(plan_matrix_results):
     assert plan_matrix_results["parity"]["flat_vs_2x2"]
 
 
+@pytest.mark.slow
 def test_plan_matrix_hierarchical_combos_train(plan_matrix_results):
     combos = [k for k in plan_matrix_results if k.startswith("2x2/")]
     assert len(combos) == 6
@@ -434,6 +436,7 @@ def shard_parity_results():
     return json.loads(line[len("RESULT "):])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("algo", ALGOS)
 def test_shard_axis_size1_is_bitwise_noop(shard_parity_results, algo):
     """Acceptance: appending a size-1 shard axis to the flat 4-worker
@@ -445,6 +448,7 @@ def test_shard_axis_size1_is_bitwise_noop(shard_parity_results, algo):
         assert res[key], (algo, key, res)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("algo", ALGOS)
 def test_shard_axis_size2_matches_replicated_after_allgather(
         shard_parity_results, algo):
@@ -536,6 +540,7 @@ def zero3_parity_results():
     return json.loads(line[len("RESULT "):])
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("algo", ALGOS)
 def test_zero3_axis_size1_is_bitwise_noop(zero3_parity_results, algo):
     """Acceptance: a size-1 zero3 axis appended to the flat 4-worker
@@ -546,6 +551,7 @@ def test_zero3_axis_size1_is_bitwise_noop(zero3_parity_results, algo):
         assert res[key], (algo, key, res)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("algo", ALGOS)
 def test_zero3_size2_matches_replicated_bitwise(zero3_parity_results,
                                                 algo):

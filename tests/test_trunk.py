@@ -160,6 +160,7 @@ _TRUNK_ZERO3_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_trunk_zero3_fit_matches_replicated():
     """The trunk under a zero3-role axis trains to the same params as
     the flat replicated plan (tight allclose: the gathered-params
