@@ -77,12 +77,15 @@ def validate_bench_json(doc):
     return doc
 
 
-def write_bench_json(benchmark, rows, **meta):
-    """Write repo-root BENCH_<benchmark>.json in the repro-bench/v1
-    schema; returns the path. `meta.quick` is always stamped
-    (defaulting to False) so tests/test_bench_schema.py can reject
-    committed files produced by an incidental `--quick` regeneration —
-    the committed trajectory must be full-mode runs."""
+def write_bench_json(benchmark, rows, out_dir=None, **meta):
+    """Write BENCH_<benchmark>.json in the repro-bench/v1 schema to
+    `out_dir` (repo root by default); returns the path. `meta.quick`
+    is always stamped (defaulting to False) so
+    tests/test_bench_schema.py can reject committed files produced by
+    an incidental `--quick` regeneration — the committed trajectory
+    must be full-mode runs. Tests that exercise bench-writing CLIs
+    should pass a temp `out_dir` so the repo-root files only ever
+    change on a deliberate regeneration."""
     meta.setdefault("quick", False)
     doc = {"schema": SCHEMA, "benchmark": benchmark,
            "backend": jax.default_backend(), "meta": meta,
@@ -92,7 +95,7 @@ def write_bench_json(benchmark, rows, **meta):
                      "derived": derived}
                     for name, us, derived in rows]}
     validate_bench_json(doc)  # never write a malformed trajectory file
-    path = os.path.join(REPO_ROOT, f"BENCH_{benchmark}.json")
+    path = os.path.join(out_dir or REPO_ROOT, f"BENCH_{benchmark}.json")
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
         f.write("\n")

@@ -16,7 +16,8 @@ charged from the *scheduled* arrival, so queueing delay under
 overload shows up in the percentiles, exactly like a production load
 generator.
 
-Always writes repo-root BENCH_serve.json (repro-bench/v1): one row per
+Always writes BENCH_serve.json (repo root unless --out redirects it,
+repro-bench/v1): one row per
 (load x bucket-config) cell with p50/p99 latency and delivered
 throughput, plus the serve/compile_flat row pinning
 recompiles_after_warmup=0 across all cells and hot-swaps
@@ -142,6 +143,11 @@ def build_parser():
                     help="serve params restored from a repro.checkpoint "
                          "archive instead of training here")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, metavar="DIR",
+                    help="directory for BENCH_serve.json (default: "
+                         "repo root — the committed trajectory; tests "
+                         "pass a temp dir so suite runs never dirty "
+                         "the committed full-run file)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: fewer requests/iterations, "
                          "default loads 500,2000 and buckets 4,16;16")
@@ -237,7 +243,7 @@ def main(argv=None):
         f"hot_swaps={hot_swaps};bucket_configs={len(configs)};"
         f"loads={len(loads)}"))
     path = write_bench_json(
-        "serve", rows, algo=args.algo, env=args.env,
+        "serve", rows, out_dir=args.out, algo=args.algo, env=args.env,
         loads=list(loads),
         bucket_configs=[list(c) for c in configs],
         requests_per_cell=args.requests, quick=args.quick,

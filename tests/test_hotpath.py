@@ -173,3 +173,11 @@ def test_write_bench_json_schema(tmp_path, monkeypatch):
                               "derived": "k=1"}
     assert doc["rows"][1]["us_per_call"] is None
     assert os.path.basename(path) == "BENCH_unittest.json"
+    # out_dir redirects away from REPO_ROOT (how CLI tests avoid
+    # clobbering the committed full-run files)
+    sub = tmp_path / "elsewhere"
+    sub.mkdir()
+    path2 = common.write_bench_json("unittest", rows, out_dir=str(sub),
+                                    quick=True)
+    assert os.path.dirname(path2) == str(sub)
+    assert json.loads(open(path2).read()) == doc

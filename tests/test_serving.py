@@ -414,11 +414,13 @@ def test_zero3_layerwise_checkpoint_serve_round_trip_bitwise(tmp_path):
 def test_cli_load_buckets_contract(tmp_path):
     """serve_policy honors --load/--buckets, reports the zero-recompile
     pin, and (always) writes a schema-valid BENCH_serve.json with one
-    row per load x bucket-config cell."""
+    row per load x bucket-config cell — into --out, so the committed
+    repo-root full-run file is never clobbered by a suite run."""
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve_policy", "--quick",
          "--algo", "ppo", "--load", "400,1600", "--buckets", "2,8;8",
-         "--requests", "80", "--train-iters", "2"],
+         "--requests", "80", "--train-iters", "2",
+         "--out", str(tmp_path)],
         capture_output=True, text=True, cwd=REPO_ROOT,
         env=dict(os.environ, PYTHONPATH=SRC), timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
@@ -433,7 +435,7 @@ def test_cli_load_buckets_contract(tmp_path):
         assert cell["n"] == 80
         assert cell["p99_ms"] > cell["p50_ms"] > 0
         assert cell["versions"] >= 2      # the mid-cell hot swap served
-    doc = json.load(open(os.path.join(REPO_ROOT, "BENCH_serve.json")))
+    doc = json.load(open(os.path.join(str(tmp_path), "BENCH_serve.json")))
     sys.path.insert(0, REPO_ROOT)
     from benchmarks.common import validate_bench_json
     validate_bench_json(doc)
@@ -454,19 +456,20 @@ def test_cli_rejects_malformed_load_and_buckets():
         assert "usage" in r.stderr or "error" in r.stderr, flags
 
 
-def test_serve_front_door_delegates_policy_subcommand():
+def test_serve_front_door_delegates_policy_subcommand(tmp_path):
     """launch/serve.py is the one front door: `serve policy ...` runs
-    the policy-serving launcher."""
+    the policy-serving launcher (flags forwarded verbatim, including
+    --out so the committed BENCH_serve.json stays untouched)."""
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve", "policy",
-         "--quick", "--requests", "40", "--train-iters", "0"],
+         "--quick", "--requests", "40", "--train-iters", "0",
+         "--out", str(tmp_path)],
         capture_output=True, text=True, cwd=REPO_ROOT,
         env=dict(os.environ, PYTHONPATH=SRC), timeout=600)
     assert r.returncode == 0, r.stderr[-2000:]
+    assert (tmp_path / "BENCH_serve.json").exists()
     out = json.loads(r.stdout.strip().splitlines()[-1])
     # --quick defaults: loads 500,2000 over bucket configs (4,16);(16)
-    # — the same grid the CI smoke regenerates, so the BENCH_serve.json
-    # this leaves behind always satisfies the schema pins
     assert out["bucket_configs"] == [[4, 16], [16]]
     assert out["loads"] == [500.0, 2000.0]
     assert out["recompiles_after_warmup"] == 0
